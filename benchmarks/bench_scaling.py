@@ -1,0 +1,30 @@
+"""Paper Fig. 10(j) weak-scaling proxy: fixed |V|/|P|, growing |P|.
+
+The paper fixes 2^22 vertices/machine and scales machines 4→256 (trillion
+edge at 256).  CPU proxy: fixed 2^12 vertices/partition, |P| ∈ {4..64};
+we report rounds, selection share and time/edge — the same quantities the
+paper discusses (vertex-selection share grows with |P|)."""
+import numpy as np
+
+from benchmarks.common import record, timeit
+from repro.core import NEConfig, evaluate, partition
+from repro.graphs.rmat import rmat
+
+
+def main(fast: bool = False):
+    ps = (4, 16) if fast else (4, 16, 64)
+    for p in ps:
+        scale = 12 + int(np.log2(p) // 2)    # |V|/|P| roughly fixed
+        g = rmat(scale, 16, seed=8)
+        cfg = NEConfig(num_partitions=p, seed=0)
+        t = timeit(lambda: partition(g, cfg), repeats=1, warmup=0)
+        res = partition(g, cfg)
+        e = np.asarray(g.edges)
+        rf = evaluate(e, res.edge_part, g.num_vertices, p).replication_factor
+        record(f"fig10j_p{p}", t * 1e6,
+               f"V={g.num_vertices};E={g.num_edges};rounds={res.rounds};"
+               f"rf={rf:.3f};ns_per_edge={t/g.num_edges*1e9:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time (seconds)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.time()
+        fn(*args)
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def header():
+    print("name,us_per_call,derived")

@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--fast`` trims sizes for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_apps, bench_elapsed, bench_kernels,
+                            bench_lambda_sweep, bench_memory, bench_quality,
+                            bench_roads, bench_scaling, bench_sequential,
+                            bench_theory)
+
+    suites = {
+        "theory": lambda: bench_theory.main(),
+        "lambda_sweep": lambda: bench_lambda_sweep.main(
+            scale=12 if args.fast else 13),
+        "quality": lambda: bench_quality.main(fast=args.fast),
+        "memory": lambda: bench_memory.main(),
+        "elapsed": lambda: bench_elapsed.main(fast=args.fast),
+        "scaling": lambda: bench_scaling.main(fast=args.fast),
+        "sequential": lambda: bench_sequential.main(fast=args.fast),
+        "apps": lambda: bench_apps.main(fast=args.fast),
+        "roads": lambda: bench_roads.main(fast=args.fast),
+        "kernels": lambda: bench_kernels.main(fast=args.fast),
+    }
+    header()
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all suites
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Distributed edge-partitioning baselines the paper compares against (§7.1).
+
+Hash family (vectorized, O(M)): 1D Random, 2D Grid, DBH [Xie+ NIPS'14].
+Streaming family (lax.scan over the edge stream): HDRF [Petroni+ CIKM'15]
+and Oblivious (PowerGraph's greedy [Gonzalez+ OSDI'12]).  The streaming
+methods are inherently sequential — the scan preserves that semantics while
+staying jit-compiled.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, hash_u32
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Hash-based partitioners
+# --------------------------------------------------------------------------
+
+def random_1d(g: Graph, p: int, seed: int = 0) -> np.ndarray:
+    eid = jnp.arange(g.num_edges, dtype=jnp.int32)
+    return np.asarray(hash_u32(eid, seed) % jnp.uint32(p)).astype(np.int32)
+
+
+def grid_2d(g: Graph, p: int, seed: int = 0) -> np.ndarray:
+    """2D-hash / Grid: partition grid r×c, row by h(u), col by h(v)."""
+    r = int(np.floor(np.sqrt(p)))
+    while p % r:
+        r -= 1
+    c = p // r
+    hu = hash_u32(g.edges[:, 0], seed) % jnp.uint32(r)
+    hv = hash_u32(g.edges[:, 1], seed + 1) % jnp.uint32(c)
+    return np.asarray(hu.astype(jnp.int32) * c
+                      + hv.astype(jnp.int32)).astype(np.int32)
+
+
+def dbh(g: Graph, p: int, seed: int = 0) -> np.ndarray:
+    """Degree-Based Hashing: hash the lower-degree endpoint."""
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    du, dv = g.degree[u], g.degree[v]
+    pick = jnp.where((du < dv) | ((du == dv) & (u < v)), u, v)
+    return np.asarray(hash_u32(pick, seed) % jnp.uint32(p)).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Streaming partitioners (lax.scan over edges)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("p", "n", "lam_balance"))
+def _hdrf_scan(edges: Array, p: int, n: int, lam_balance: float = 1.0):
+    """HDRF: score(p) = C_rep(p) + λ·C_bal(p); partial degrees θ."""
+    m = edges.shape[0]
+
+    def step(carry, e):
+        pdeg, vpart, sizes = carry       # (N,), (N,P) bool, (P,)
+        u, v = e[0], e[1]
+        pdeg = pdeg.at[u].add(1).at[v].add(1)
+        du, dv = pdeg[u], pdeg[v]
+        theta_u = du / (du + dv)
+        theta_v = 1.0 - theta_u
+        in_u, in_v = vpart[u], vpart[v]                        # (P,)
+        g_u = jnp.where(in_u, 1.0 + (1.0 - theta_u), 0.0)
+        g_v = jnp.where(in_v, 1.0 + (1.0 - theta_v), 0.0)
+        maxs = sizes.max()
+        mins = sizes.min()
+        c_bal = (maxs - sizes) / (1e-3 + maxs - mins)
+        score = g_u + g_v + lam_balance * c_bal
+        tgt = jnp.argmax(score).astype(jnp.int32)
+        vpart = vpart.at[u, tgt].set(True).at[v, tgt].set(True)
+        sizes = sizes.at[tgt].add(1)
+        return (pdeg, vpart, sizes), tgt
+
+    init = (jnp.zeros((n,), jnp.int32), jnp.zeros((n, p), bool),
+            jnp.zeros((p,), jnp.int32))
+    _, parts = jax.lax.scan(step, init, edges)
+    return parts
+
+
+def hdrf(g: Graph, p: int, lam_balance: float = 1.0, seed: int = 0,
+         ) -> np.ndarray:
+    order = np.asarray(hash_u32(jnp.arange(g.num_edges), seed)).argsort()
+    parts = _hdrf_scan(g.edges[order], p, g.num_vertices, lam_balance)
+    out = np.empty(g.num_edges, np.int32)
+    out[order] = np.asarray(parts)
+    return out
+
+
+@partial(jax.jit, static_argnames=("p", "n", "limit"))
+def _oblivious_scan(edges: Array, p: int, n: int, limit: int):
+    """PowerGraph Oblivious greedy rules, streamed, α-capacity bounded
+    (without the cap the greedy glues connected graphs into one part)."""
+    def step(carry, e):
+        vpart, sizes = carry
+        u, v = e[0], e[1]
+        room = sizes < limit
+        in_u, in_v = vpart[u] & room, vpart[v] & room
+        both = in_u & in_v
+        either = in_u | in_v
+        # rule 1: common partition; rule 2: a partition of one endpoint;
+        # rule 3: least loaded overall — least-loaded tie-break throughout.
+        cand = jnp.where(both.any(), both, jnp.where(either.any(), either,
+                                                     room))
+        score = jnp.where(cand, -sizes.astype(jnp.float32), -jnp.inf)
+        tgt = jnp.argmax(score).astype(jnp.int32)
+        vpart = vpart.at[u, tgt].set(True).at[v, tgt].set(True)
+        sizes = sizes.at[tgt].add(1)
+        return (vpart, sizes), tgt
+
+    init = (jnp.zeros((n, p), bool), jnp.zeros((p,), jnp.int32))
+    _, parts = jax.lax.scan(step, init, edges)
+    return parts
+
+
+def oblivious(g: Graph, p: int, seed: int = 0, alpha: float = 1.1
+              ) -> np.ndarray:
+    order = np.asarray(hash_u32(jnp.arange(g.num_edges), seed)).argsort()
+    limit = int(alpha * g.num_edges / p) + 1
+    parts = _oblivious_scan(g.edges[order], p, g.num_vertices, limit)
+    out = np.empty(g.num_edges, np.int32)
+    out[order] = np.asarray(parts)
+    return out
+
+
+PARTITIONERS = {
+    "random": random_1d,
+    "grid": grid_2d,
+    "dbh": dbh,
+    "hdrf": hdrf,
+    "oblivious": oblivious,
+}

@@ -1,0 +1,157 @@
+"""Undirected graph container in CSR form, JAX-native.
+
+The paper stores the input graph 2D-hash edge-partitioned in CSR across
+allocation processes (§4 "Data Structure").  We keep the same canonical
+representation: an undirected edge list expanded into 2M directed slots,
+sorted by source vertex, with an ``edge_id`` column mapping each directed
+slot back to its undirected edge.  All partitioner state is keyed either
+per-undirected-edge (allocation) or per-vertex (replica sets / D_rest).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph, CSR over directed slots.
+
+    Attributes:
+      edges:    (M, 2) int32 undirected edge endpoints (deduplicated, no loops).
+      indptr:   (N+1,) int32 CSR row pointers over the 2M directed slots.
+      adj_dst:  (2M,) int32 destination vertex of each directed slot.
+      adj_eid:  (2M,) int32 undirected edge id of each directed slot.
+      slot_src: (2M,) int32 source vertex of each directed slot (CSR-expanded).
+      degree:   (N,) int32 vertex degrees.
+    """
+
+    edges: Array
+    indptr: Array
+    adj_dst: Array
+    adj_eid: Array
+    slot_src: Array
+    degree: Array
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.adj_dst.shape[0])
+
+
+def canonicalize_edges(edges: np.ndarray, num_vertices: int | None = None,
+                       ) -> tuple[np.ndarray, int]:
+    """Drop self loops + duplicate edges, canonicalize u < v. numpy, host-side."""
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        return np.zeros((0, 2), np.int32), int(num_vertices or 0)
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    n = int(num_vertices if num_vertices is not None
+            else (max(u.max(), v.max()) + 1 if u.size else 0))
+    key = u * n + v
+    _, idx = np.unique(key, return_index=True)
+    out = np.stack([u[idx], v[idx]], axis=1).astype(np.int32)
+    return out, n
+
+
+def from_edges(edges: np.ndarray, num_vertices: int | None = None,
+               dedup: bool = True) -> Graph:
+    """Build a Graph from an undirected edge list (host-side numpy)."""
+    if dedup:
+        edges, n = canonicalize_edges(edges, num_vertices)
+    else:
+        edges = np.asarray(edges, dtype=np.int32)
+        n = int(num_vertices if num_vertices is not None
+                else (edges.max() + 1 if edges.size else 0))
+    m = edges.shape[0]
+    src = np.concatenate([edges[:, 0], edges[:, 1]])
+    dst = np.concatenate([edges[:, 1], edges[:, 0]])
+    eid = np.concatenate([np.arange(m, dtype=np.int32)] * 2)
+    order = np.argsort(src, kind="stable")
+    src, dst, eid = src[order], dst[order], eid[order]
+    degree = np.bincount(src, minlength=n).astype(np.int32)
+    indptr = np.zeros(n + 1, np.int32)
+    np.cumsum(degree, out=indptr[1:])
+    return Graph(
+        edges=jnp.asarray(edges),
+        indptr=jnp.asarray(indptr),
+        adj_dst=jnp.asarray(dst.astype(np.int32)),
+        adj_eid=jnp.asarray(eid.astype(np.int32)),
+        slot_src=jnp.asarray(src.astype(np.int32)),
+        degree=jnp.asarray(degree),
+    )
+
+
+def to_networkx(g: Graph):
+    import networkx as nx
+
+    gx = nx.Graph()
+    gx.add_nodes_from(range(g.num_vertices))
+    gx.add_edges_from(np.asarray(g.edges).tolist())
+    return gx
+
+
+# ---------------------------------------------------------------------------
+# 2D-hash initial distribution (paper §4): edges are uniquely assigned to an
+# allocation process from a √D×√D process grid by hashing both endpoints, so
+# replica locations of a vertex are *computable* from its id (no metadata).
+# ---------------------------------------------------------------------------
+
+def _mix(x: Array) -> Array:
+    """Cheap deterministic integer hash (xorshift-multiply, 32-bit)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def hash_u32(x: Array, salt: int = 0) -> Array:
+    return _mix(x.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * jnp.uint32(salt))
+
+
+def grid_assign(edges: Array, num_devices: int, rows: int | None = None,
+                salt: int = 0) -> Array:
+    """2D-hash (grid) edge→device assignment.  Returns (M,) int32 device ids."""
+    r = rows or int(np.floor(np.sqrt(num_devices)))
+    while num_devices % r:
+        r -= 1
+    c = num_devices // r
+    hu = hash_u32(edges[:, 0], salt) % jnp.uint32(r)
+    hv = hash_u32(edges[:, 1], salt + 1) % jnp.uint32(c)
+    return (hu.astype(jnp.int32) * c + hv.astype(jnp.int32))
+
+
+def shard_edges(edges: np.ndarray, num_devices: int, salt: int = 0,
+                ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Host-side 2D-hash distribution into equal-length padded shards.
+
+    Returns (shards, masks, capacity): shards is (D, C, 2) int32 with invalid
+    rows = 0, masks is (D, C) bool.
+    """
+    dev = np.asarray(grid_assign(jnp.asarray(edges), num_devices, salt=salt))
+    counts = np.bincount(dev, minlength=num_devices)
+    cap = int(counts.max()) if counts.size else 1
+    shards = np.zeros((num_devices, cap, 2), np.int32)
+    masks = np.zeros((num_devices, cap), bool)
+    for d in range(num_devices):
+        rows = edges[dev == d]
+        shards[d, : rows.shape[0]] = rows
+        masks[d, : rows.shape[0]] = True
+    return shards, masks, cap

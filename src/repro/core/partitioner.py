@@ -1,0 +1,283 @@
+"""Distributed Neighbor Expansion (Distributed NE) — vectorized JAX core.
+
+Implements the paper's parallel expansion (§3), distributed edge allocation
+(§4) and multi-expansion (§5) as a bounded-shape, jit-compiled fixed-point
+iteration.  One ``jax.lax.while_loop`` step == one paper round:
+
+  1. every active partition selects its ``k = clamp(λ·|B_p|, 1, K)``
+     minimum-``D_rest`` boundary vertices (priority queue → masked top_k);
+     empty boundaries re-seed from a random vertex with unallocated edges,
+  2. one-hop allocation with deterministic vertex-grain conflict resolution
+     (min ``(edges_per_part, partition_id)`` key — the paper's CAS made
+     reproducible; see DESIGN.md §3.1),
+  3. replica-set updates (the paper's ``SyncVertexAllocations`` — a no-op
+     here because the single-controller state is already global; the
+     shard_map version in ``repro.dist.partitioner_sm`` does the OR
+     all-reduce),
+  4. two-hop "free edge" allocation under Condition (5) with
+     ``argmin NumEdges`` tie-breaking (paper Alg. 3).
+
+Boundary sets are *derived*, not stored: ``v ∈ B_p  ⇔  p ∈ parts(v) ∧
+D_rest(v) > 0`` — this is exactly the paper's definition of B(X) and avoids
+an (N, P) frontier structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, hash_u32
+
+Array = jax.Array
+I32_INF = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class NEConfig:
+    """Distributed NE hyper-parameters (paper defaults)."""
+
+    num_partitions: int
+    alpha: float = 1.1          # imbalance factor (paper §7.1)
+    lam: float = 0.1            # expansion factor λ (paper §5, Fig. 6)
+    k_sel: int = 256            # static cap on per-round selections per part
+    max_rounds: int = 4096      # safety bound on while_loop
+    sel_chunk: int = 8          # partitions scored per selection chunk
+    edge_chunk: int = 1 << 18   # edges per two-hop intersection chunk
+    two_hop: bool = True        # Condition (5) allocation on/off (ablation)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_partitions >= 1
+        assert self.alpha > 1.0
+        assert 0.0 < self.lam <= 1.0
+
+    def clamped(self, num_vertices: int) -> "NEConfig":
+        return dataclasses.replace(self, k_sel=min(self.k_sel, num_vertices))
+
+
+class NEState(NamedTuple):
+    edge_part: Array        # (M,)   int32, -1 = unallocated
+    vparts: Array           # (N, P) bool replica sets  V(E_p)
+    degree_rest: Array      # (N,)   int32  D_rest
+    edges_per_part: Array   # (P,)   int32  |E_p|
+    key: Array              # PRNG key
+    rounds: Array           # ()     int32
+    new_last_round: Array   # ()     int32  edges allocated in last round
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionResult:
+    edge_part: np.ndarray       # (M,) int32 final assignment
+    vparts: np.ndarray          # (N, P) bool replica sets
+    edges_per_part: np.ndarray  # (P,) int32
+    rounds: int
+    leftover: int               # edges assigned by the cleanup pass
+
+
+def _enc(count: Array, p: Array, num_partitions: int) -> Array:
+    """Priority key: smaller edge count wins, then smaller partition id."""
+    cap = (I32_INF - num_partitions) // num_partitions - 1
+    return jnp.minimum(count, cap) * num_partitions + p
+
+
+def _select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
+                  remaining_c):
+    """Selection for a chunk of partitions.  vparts_c: (C, N) bool."""
+    n = degree_rest.shape[0]
+    bnd = vparts_c & (degree_rest > 0)[None, :] & active_c[:, None]   # (C,N)
+    bsize = bnd.sum(axis=1)                                            # (C,)
+    # k_eff = clamp(ceil(λ|B_p|), 1, K)   (paper Alg. 4 line 5)
+    k_eff = jnp.clip(jnp.ceil(lam * bsize).astype(jnp.int32), 1, k_sel)
+    scores = jnp.where(bnd, degree_rest[None, :], I32_INF)
+    neg_top, idx = jax.lax.top_k(-scores, k_sel)                       # (C,K)
+    valid = (neg_top > -I32_INF) & (jnp.arange(k_sel)[None, :] < k_eff[:, None])
+    # Capacity-aware prefix: D_rest(v) is exactly the one-hop edge cost of
+    # expanding v (paper Eq. 3) — keep only the selection prefix that fits
+    # the partition's remaining α-capacity (the paper's per-round overshoot
+    # is one vertex; multi-expansion must not multiply it by k).
+    cost = jnp.where(valid, -neg_top, 0)
+    fits = jnp.cumsum(cost, axis=1) <= remaining_c[:, None]
+    valid &= fits | (jnp.arange(k_sel)[None, :] == 0)
+    # Random re-seed when the boundary is empty (paper Alg. 1 line 6).
+    any_rest = degree_rest > 0
+    gumb = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(keys_c)
+    rnd_v = jnp.argmax(jnp.where(any_rest[None, :], gumb, -1.0), axis=1)
+    restart = (bsize == 0) & active_c & any_rest.any()
+    first = jnp.where(restart, rnd_v.astype(jnp.int32), idx[:, 0])
+    idx = idx.at[:, 0].set(first)
+    valid = valid.at[:, 0].set(jnp.where(restart, True, valid[:, 0]))
+    valid &= active_c[:, None]
+    return idx, valid
+
+
+def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
+    n = g.num_vertices
+    m = g.num_edges
+    p_num = cfg.num_partitions
+    key, sub = jax.random.split(state.key)
+
+    active = state.edges_per_part <= limit          # soft cap (paper Alg. 1)
+
+    # --- 1. selection (multi-expansion, paper §5) --------------------------
+    c = min(cfg.sel_chunk, p_num)
+    n_chunks = (p_num + c - 1) // c
+    p_pad = n_chunks * c
+    part_ids = jnp.arange(p_pad, dtype=jnp.int32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(sub, i))(part_ids)
+    vparts_pad = jnp.pad(state.vparts, ((0, 0), (0, p_pad - p_num)))
+    active_pad = jnp.pad(active, (0, p_pad - p_num))
+
+    remaining = jnp.pad(limit - state.edges_per_part, (0, p_pad - p_num))
+
+    def sel(args):
+        pc, ac, kc, rc = args
+        return _select_chunk(pc, ac, state.degree_rest, cfg.lam, cfg.k_sel,
+                             kc, rc)
+
+    sel_idx, sel_valid = jax.lax.map(
+        sel,
+        (vparts_pad.reshape(n, n_chunks, c).transpose(1, 2, 0),
+         active_pad.reshape(n_chunks, c),
+         keys.reshape(n_chunks, c, *keys.shape[1:]),
+         remaining.reshape(n_chunks, c)),
+    )
+    sel_idx = sel_idx.reshape(p_pad, cfg.k_sel)[:p_num]
+    sel_valid = sel_valid.reshape(p_pad, cfg.k_sel)[:p_num]
+
+    # --- 2. vertex-grain claims + one-hop allocation (paper Alg. 3) --------
+    part_of_row = jnp.broadcast_to(
+        jnp.arange(p_num, dtype=jnp.int32)[:, None], sel_idx.shape)
+    claim_keys = _enc(state.edges_per_part[part_of_row.ravel()],
+                      part_of_row.ravel(), p_num)
+    flat_v = jnp.where(sel_valid.ravel(), sel_idx.ravel(), n)   # n → dropped
+    vclaim_key = jnp.full((n,), I32_INF, jnp.int32)
+    vclaim_key = vclaim_key.at[flat_v].min(claim_keys, mode="drop")
+
+    slot_key = vclaim_key[g.slot_src]
+    slot_ok = (slot_key < I32_INF) & (state.edge_part[g.adj_eid] < 0)
+    slot_key = jnp.where(slot_ok, slot_key, I32_INF)
+    ekey = jax.ops.segment_min(slot_key, g.adj_eid, num_segments=m)
+    new1 = ekey < I32_INF
+    part1 = jnp.where(new1, ekey % p_num, -1)
+
+    edge_part = jnp.where(new1, part1, state.edge_part)
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    add_row = jnp.where(new1, part1, 0)
+    counts1 = jnp.zeros((p_num,), jnp.int32).at[add_row].add(
+        new1.astype(jnp.int32))
+    vparts = state.vparts
+    drop_u = jnp.where(new1, u, n)
+    drop_v = jnp.where(new1, v, n)
+    vparts = vparts.at[drop_u, add_row].set(True, mode="drop")
+    vparts = vparts.at[drop_v, add_row].set(True, mode="drop")
+    dec = (jnp.zeros((n,), jnp.int32)
+           .at[drop_u].add(new1.astype(jnp.int32), mode="drop")
+           .at[drop_v].add(new1.astype(jnp.int32), mode="drop"))
+    degree_rest = state.degree_rest - dec
+    edges_per_part = state.edges_per_part + counts1
+
+    # --- 3. two-hop "free edge" allocation, Condition (5) ------------------
+    if cfg.two_hop:
+        ce = min(cfg.edge_chunk, m)
+        n_ec = (m + ce - 1) // ce
+        m_pad = n_ec * ce
+        pad = m_pad - m
+        u_p = jnp.pad(u, (0, pad))
+        v_p = jnp.pad(v, (0, pad))
+        un_p = jnp.pad(edge_part < 0, (0, pad))  # pads → False
+        enc_vec = _enc(edges_per_part, jnp.arange(p_num, dtype=jnp.int32),
+                       p_num)  # tie-break by current |E_p| (Alg. 3 line 16)
+        # free edges only go to partitions still under the α-capacity, and a
+        # partition may absorb at most its remaining capacity this round —
+        # otherwise one round's free-edge batch around a hub blows up |E_p|
+        # (the paper's per-vertex expansion granularity implies the same cap).
+        enc_vec = jnp.where(edges_per_part <= limit, enc_vec, I32_INF)
+        quota0 = jnp.maximum(limit + 1 - edges_per_part, 0)
+
+        def two_hop(quota, args):
+            uu, vv, unal = args
+            inter = vparts[uu] & vparts[vv]                      # (ce, P)
+            k2 = jnp.where(inter & unal[:, None], enc_vec[None, :], I32_INF)
+            best = k2.min(axis=1)
+            cand = jnp.where(best < I32_INF, best % p_num, -1)
+            onehot = (cand[:, None] == jnp.arange(p_num)[None, :])
+            rank = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1  # excl.
+            keep = (cand >= 0) & (jnp.take_along_axis(
+                rank, jnp.maximum(cand, 0)[:, None], axis=1)[:, 0]
+                < quota[jnp.maximum(cand, 0)])
+            out = jnp.where(keep, cand, -1)
+            quota = quota - jnp.zeros((p_num,), jnp.int32).at[
+                jnp.maximum(out, 0)].add(keep.astype(jnp.int32))
+            return quota, out
+
+        _, part2 = jax.lax.scan(
+            two_hop, quota0,
+            (u_p.reshape(n_ec, ce), v_p.reshape(n_ec, ce),
+             un_p.reshape(n_ec, ce)),
+        )
+        part2 = part2.reshape(m_pad)[:m]
+        new2 = part2 >= 0
+        edge_part = jnp.where(new2, part2, edge_part)
+        add2 = jnp.where(new2, part2, 0)
+        edges_per_part = edges_per_part + jnp.zeros(
+            (p_num,), jnp.int32).at[add2].add(new2.astype(jnp.int32))
+        dec2 = (jnp.zeros((n,), jnp.int32)
+                .at[jnp.where(new2, u, n)].add(new2.astype(jnp.int32),
+                                               mode="drop")
+                .at[jnp.where(new2, v, n)].add(new2.astype(jnp.int32),
+                                               mode="drop"))
+        degree_rest = degree_rest - dec2
+        new_total = new1.sum() + new2.sum()
+    else:
+        new_total = new1.sum()
+
+    return NEState(edge_part, vparts, degree_rest, edges_per_part, key,
+                   state.rounds + 1, new_total.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
+    n, m, p = g.num_vertices, g.num_edges, cfg.num_partitions
+    limit = int(cfg.alpha * m / p)
+    init = NEState(
+        edge_part=jnp.full((m,), -1, jnp.int32),
+        vparts=jnp.zeros((n, p), bool),
+        degree_rest=g.degree.astype(jnp.int32),
+        edges_per_part=jnp.zeros((p,), jnp.int32),
+        key=jax.random.PRNGKey(cfg.seed),
+        rounds=jnp.zeros((), jnp.int32),
+        new_last_round=jnp.ones((), jnp.int32),
+    )
+
+    def cond(s: NEState):
+        return ((s.edge_part < 0).any()
+                & (s.rounds < cfg.max_rounds))
+
+    return jax.lax.while_loop(cond, partial(_round, g, cfg, limit), init)
+
+
+def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
+    """Run Distributed NE.  Returns host-side result with cleanup applied."""
+    cfg = cfg.clamped(g.num_vertices)
+    state = jax.block_until_ready(_partition_jit(g, cfg))
+    edge_part = np.asarray(state.edge_part)
+    vparts = np.asarray(state.vparts)
+    counts = np.asarray(state.edges_per_part)
+    leftover = int((edge_part < 0).sum())
+    if leftover:  # max_rounds safety hatch: least-loaded hash assignment
+        rem = np.nonzero(edge_part < 0)[0]
+        order = np.argsort(counts, kind="stable")
+        tgt = order[np.asarray(hash_u32(jnp.asarray(rem))) %
+                    max(1, cfg.num_partitions // 4 or 1)]
+        edge_part[rem] = tgt
+        np.add.at(counts, tgt, 1)
+        e = np.asarray(g.edges)
+        vparts[e[rem, 0], tgt] = True
+        vparts[e[rem, 1], tgt] = True
+    return PartitionResult(edge_part, vparts, counts, int(state.rounds),
+                           leftover)

@@ -1,0 +1,50 @@
+"""Synthetic graph generators for benchmarks and tests."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph, from_edges
+from repro.core.theory import theorem2_construction
+
+
+def ring_plus_complete(n: int) -> tuple[Graph, int]:
+    """Theorem 2 tightness construction; returns (graph, |P|)."""
+    edges, nv, p = theorem2_construction(n)
+    return from_edges(edges, num_vertices=nv), p
+
+
+def grid2d(rows: int, cols: int) -> Graph:
+    """Road-network proxy (paper §7.7 non-skewed graphs)."""
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    h = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], 1)
+    v = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], 1)
+    return from_edges(np.concatenate([h, v]), num_vertices=rows * cols)
+
+
+def barabasi_albert(n: int, m_attach: int, seed: int = 0) -> Graph:
+    import networkx as nx
+
+    gx = nx.barabasi_albert_graph(n, m_attach, seed=seed)
+    return from_edges(np.asarray(gx.edges, dtype=np.int64), num_vertices=n)
+
+
+def erdos_renyi(n: int, avg_deg: float, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    e = rng.integers(0, n, size=(int(m * 1.2), 2))
+    return from_edges(e, num_vertices=n)
+
+
+def powerlaw_configuration(n: int, alpha: float, seed: int = 0) -> Graph:
+    """Configuration-model power-law graph, Pr[d] ∝ d^-α, d_min=1 (§6)."""
+    rng = np.random.default_rng(seed)
+    ds = np.arange(1, n // 4 + 1, dtype=np.float64)
+    pmf = ds ** (-alpha)
+    pmf /= pmf.sum()
+    deg = rng.choice(ds.astype(np.int64), size=n, p=pmf)
+    if deg.sum() % 2:
+        deg[0] += 1
+    stubs = np.repeat(np.arange(n), deg)
+    rng.shuffle(stubs)
+    e = stubs.reshape(-1, 2)
+    return from_edges(e, num_vertices=n)

@@ -1,0 +1,39 @@
+"""R-MAT recursive graph generator [Chakrabarti+ SDM'04] (paper §7.1).
+
+Graph500 parameters (a,b,c,d) = (0.57, 0.19, 0.19, 0.05); edge factor EF
+gives M = EF·2^scale sampled edges before dedup (the paper compacts
+duplicates too, §7.3).  Vectorized numpy — generation is host-side data
+pipeline work, not device compute.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph, from_edges
+
+GRAPH500 = (0.57, 0.19, 0.19, 0.05)
+
+
+def rmat_edges(scale: int, edge_factor: int, seed: int = 0,
+               probs: tuple[float, float, float, float] = GRAPH500,
+               ) -> np.ndarray:
+    n = 1 << scale
+    m = n * edge_factor
+    a, b, c, d = probs
+    rng = np.random.default_rng(seed)
+    u = np.zeros(m, np.int64)
+    v = np.zeros(m, np.int64)
+    for _ in range(scale):
+        r = rng.random(m)
+        right = r >= a + c          # column bit: quadrants b, d
+        lower = ((r >= a) & (r < a + c)) | (r >= a + b + c)  # row bit: c, d
+        u = (u << 1) | lower
+        v = (v << 1) | right
+    # random vertex relabel so degree order isn't the identity
+    perm = rng.permutation(n)
+    return np.stack([perm[u], perm[v]], axis=1)
+
+
+def rmat(scale: int, edge_factor: int, seed: int = 0) -> Graph:
+    return from_edges(rmat_edges(scale, edge_factor, seed),
+                      num_vertices=1 << scale)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for block-sparse SpMM: segment_sum message passing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ref(edges: np.ndarray, x, num_nodes: int,
+             directed_both: bool = True):
+    """out[v] = Σ_{(u,v)∈E} x[u] via segment_sum (the system's own GNN
+    aggregation primitive — kernels must match it exactly)."""
+    e = jnp.asarray(edges)
+    if directed_both:
+        src = jnp.concatenate([e[:, 0], e[:, 1]])
+        dst = jnp.concatenate([e[:, 1], e[:, 0]])
+    else:
+        src, dst = e[:, 0], e[:, 1]
+    return jax.ops.segment_sum(x[src], dst, num_segments=num_nodes)

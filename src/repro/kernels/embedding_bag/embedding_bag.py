@@ -1,0 +1,58 @@
+"""EmbeddingBag gather-reduce kernel — TPU scalar-prefetch row gather.
+
+The bag indices are scalar-prefetched; each grid step (bag, slot) pulls
+one table row into VMEM via the BlockSpec index_map (the table itself
+never leaves HBM) and accumulates into the bag's output row.  This is the
+TPU-native replacement for torch.nn.EmbeddingBag / FBGEMM TBE.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, w_ref, row_ref, o_ref, acc_scr, *, k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    w = w_ref[0, 0]
+    acc_scr[...] += row_ref[0].astype(jnp.float32) * w
+
+    @pl.when(j == k - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_kernel(table, ids, weights, interpret: bool = True):
+    """table: (V, D); ids: (B, K) int32; weights: (B, K) f32 (0 = padding).
+
+    Returns (B, D) = Σ_k weights[b,k] · table[ids[b,k]].
+    """
+    b, k = ids.shape
+    v, d = table.shape
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, k=k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, k),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, j, ids: (i, j)),
+                pl.BlockSpec((1, d), lambda i, j, ids: (ids[i, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ids, weights, table)
+    return out

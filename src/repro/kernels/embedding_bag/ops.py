@@ -1,0 +1,24 @@
+"""jit'd wrapper with torch-EmbeddingBag-style modes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, weights=None, mode: str = "sum"):
+    """table (V,D), ids (B,K), optional weights (B,K).  mode: sum|mean."""
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    interpret = jax.default_backend() != "tpu"
+    out = embedding_bag_kernel(table, ids.astype(jnp.int32),
+                               weights.astype(jnp.float32),
+                               interpret=interpret)
+    if mode == "mean":
+        out = out / jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+    return out
+
+
+embedding_bag_reference = embedding_bag_ref

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle: take + weighted sum (the system's own lookup path)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights):
+    emb = table[ids]                        # (B, K, D)
+    return (emb * weights[..., None]).sum(axis=1).astype(table.dtype)

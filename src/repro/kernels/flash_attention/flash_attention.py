@@ -1,0 +1,97 @@
+"""Blocked online-softmax attention (FlashAttention-style) for TPU.
+
+Grid (batch·heads, q_blocks, kv_blocks); q/k/v tiles live in VMEM via
+BlockSpec, running max/denominator/accumulator in VMEM scratch.  The kv
+axis is the innermost ("arbitrary") grid dim so the accumulator carries
+across it.  MXU-aligned tiles (multiples of 128 on the matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int, nk: int,
+                  kv_len: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kj < kv_len                                  # padded kv tail
+    if causal:
+        qi = (pl.program_id(1) * bq
+              + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        valid &= kj <= qi
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_bhsd(q, k, v, causal: bool = True, bq: int = 128,
+                         bk: int = 128, interpret: bool = True):
+    """q, k, v: (BH, S, D) / (BH, T, D).  Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    bq = min(bq, max(s, 8))
+    bk = min(bk, max(t, 8))
+    sp = -(-s // bq) * bq
+    tp = -(-t // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    nq, nk = sp // bq, tp // bk
+    scale = 1.0 / np.sqrt(d)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk, kv_len=t),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s, :]

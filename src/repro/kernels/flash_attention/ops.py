@@ -1,0 +1,32 @@
+"""jit'd public wrapper: (B, S, H, D) layout + TPU/CPU dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """q: (B,S,H,D), k/v: (B,T,H,D) — same-head attention (repeat GQA kv
+    before calling).  Pallas kernel on TPU, interpret-mode elsewhere."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    interpret = jax.default_backend() != "tpu"
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    ob = flash_attention_bhsd(qb, kb, vb, causal=causal, bq=bq, bk=bk,
+                              interpret=interpret)
+    return ob.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def flash_attention_reference(q, k, v, causal: bool = True):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    ob = attention_ref(qb, kb, vb, causal=causal)
+    return ob.reshape(b, h, s, d).transpose(0, 2, 1, 3)

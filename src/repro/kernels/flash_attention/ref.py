@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (BH, S/T, D) — plain softmax attention in fp32."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, t = q.shape[1], k.shape[1]
+        mask = jnp.arange(t)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

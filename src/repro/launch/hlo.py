@@ -1,0 +1,134 @@
+"""Optimized-HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` reports per-device FLOPs and bytes accessed,
+but not collective traffic — we parse the post-SPMD HLO text and sum the
+result-shape bytes of every collective op (all-gather counts its gathered
+output; all-reduce its reduced tensor; all-to-all / collective-permute /
+reduce-scatter their results).  Constants: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast",
+                  "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind over the (per-device) module.
+
+    NOTE: while-loop bodies appear once in the text but execute trip-count
+    times — see ``collective_bytes_scoped`` for the corrected accounting.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.+?) (" +
+                     "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in s:
+            continue  # avoid double counting start/done pairs
+        out[op] = out.get(op, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def collective_bytes_scoped(hlo_text: str, loop_scale: int
+                            ) -> dict[str, dict[str, int]]:
+    """Collective bytes split by scope: ENTRY-level ops execute once per
+    step; ops inside loop-body computations (XLA names them ``wide.*`` /
+    ``*region*``) execute ~loop_scale times (layer-scan trip count).
+
+    Returns {"entry": {...}, "loop": {...}, "total_scaled": {...}}.
+    """
+    entry: dict[str, int] = {}
+    loop: dict[str, int] = {}
+    cur_is_loop = False
+    for line in hlo_text.splitlines():
+        mc = re.match(r"^(%?[\w\-.]+)\s.*\{\s*$", line)
+        if mc and not line.startswith(" "):
+            name = mc.group(1)
+            cur_is_loop = ("wide" in name or "region" in name
+                           or "while" in name or "body" in name)
+            if name.startswith("ENTRY"):
+                cur_is_loop = False
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.+?) (" +
+                     "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(", s)
+        if not m or "-done(" in s:
+            continue
+        tgt = loop if cur_is_loop else entry
+        tgt[m.group(2)] = tgt.get(m.group(2), 0) + _shape_bytes(m.group(1))
+    total = dict(entry)
+    for k, v in loop.items():
+        total[k] = total.get(k, 0) + v * loop_scale
+    return {"entry": entry, "loop": loop, "total_scaled": total}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops (loop bodies once!)
+    hbm_bytes: float           # per-device bytes accessed (ditto)
+    coll_bytes: float          # per-device collective result bytes (ditto)
+    compute_s: float           # model_flops/(chips·peak) — exact useful work
+    memory_s: float            # loop-corrected HLO bytes / HBM bw
+    collective_s: float        # loop-corrected collective bytes / link bw
+    dominant: str
+    model_flops_total: float   # 6·N·D-style, whole step, all chips
+    useful_ratio: float        # model_flops / (loop-corrected flops × chips)
+    loop_scale: int = 1
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, coll: dict[str, int], n_chips: int,
+             model_flops: float, loop_scale: int = 1) -> Roofline:
+    """XLA cost_analysis counts while/scan bodies exactly once (verified
+    empirically); ``loop_scale`` is the static trip count of the dominant
+    loop (layers × microbatches), applied to the loop-resident costs.  The
+    compute term uses MODEL_FLOPS directly (the useful-work time — remat
+    adds ~1.3× on top; noted in EXPERIMENTS.md §Roofline)."""
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    cb = float(sum(coll.values()))
+    terms = {
+        "compute": model_flops / n_chips / PEAK_FLOPS,
+        "memory": hbm * loop_scale / HBM_BW,
+        "collective": cb * loop_scale / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    corrected = flops * loop_scale * n_chips
+    return Roofline(flops, hbm, cb, terms["compute"], terms["memory"],
+                    terms["collective"], dom, model_flops,
+                    model_flops / corrected if corrected else 0.0,
+                    loop_scale)

@@ -1,0 +1,502 @@
+"""Step builders: (arch × shape × mesh) → jit-able fn + ShapeDtypeStruct
+inputs + shardings.  Used by smoke tests (mesh=None, reduced configs) and
+the multi-pod dry-run (production mesh, ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec
+from repro.dist.sharding import NO_RULES, Rules, lm_rules
+from repro.models.common import cross_entropy
+from repro.train import optimizer as opt
+
+Array = jax.Array
+OPT_CFG = opt.OptConfig(lr=1e-3, warmup_steps=10, total_steps=1000)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable                 # jit-able step
+    args: tuple                  # ShapeDtypeStructs (dry-run) or arrays
+    in_shardings: Any            # pytree of NamedSharding or None
+    donate_argnums: tuple[int, ...]
+    model_flops: float           # 6·N·D-style useful-compute estimate
+    meta: dict
+    loop_scale: int = 1          # static trip count of the dominant scan
+
+
+def _named(mesh, tree_specs):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _replicated_specs(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+def lm_model_flops(cfg, shape: dict) -> float:
+    s, b = shape["seq_len"], shape["global_batch"]
+    n_act = cfg.active_param_count()
+    l, h, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    if shape["kind"] == "train":
+        t = b * s
+        # 6·N·T matmul + causal attention 2 matmuls fwd (×3 with bwd),
+        # averaged causal span S/2
+        return 6.0 * n_act * t + 3.0 * 2.0 * 2.0 * l * h * hd * t * (s / 2)
+    if shape["kind"] == "prefill":
+        t = b * s
+        return 2.0 * n_act * t + 2.0 * 2.0 * l * h * hd * t * (s / 2)
+    # decode: 1 token/row against an s-long cache
+    t = b
+    return 2.0 * n_act * t + 2.0 * 2.0 * l * h * hd * t * s
+
+
+def _lm_rules(cfg, shape, mesh, multi_pod) -> Rules:
+    if mesh is None:
+        return NO_RULES
+    tp = mesh.shape["model"]
+    ba = _batch_axes(multi_pod)
+    flags = dict(q_ok=cfg.n_heads % tp == 0,
+                 kv_ok=cfg.n_kv_heads % tp == 0,
+                 ffn_ok=(cfg.d_ff % tp == 0) and cfg.d_ff > 0,
+                 vocab_ok=cfg.vocab % tp == 0)
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+    if shape["global_batch"] % dp != 0:
+        ba = ()   # batch doesn't divide DP → replicate batch dim
+    if shape["kind"] == "decode":
+        # split-KV (flash-decoding) axes: the model axis when kv heads can't
+        # shard; plus the idle batch axes for batch=1 long-context cells.
+        seq_axes = []
+        w2d = ()
+        if not ba:
+            seq_axes += list(_batch_axes(multi_pod))
+            # data axes idle for params too → 2D weight sharding
+            if cfg.d_model % dp == 0:
+                w2d = _batch_axes(multi_pod)
+        if not flags["kv_ok"]:
+            seq_axes.append("model")
+        if shape["seq_len"] % max(
+                1, int(np.prod([mesh.shape[a] for a in seq_axes] or [1]))):
+            seq_axes = []
+        return lm_rules(batch_axes=ba, tp="model", seq_kv_axes=seq_axes,
+                        w2d_axes=w2d, **flags)
+    # sequence-parallel layout when attention heads can't use the TP axis;
+    # Megatron-SP residual stream + FSDP (ZeRO-3) weights for large models
+    sp = (not flags["q_ok"]) and shape["seq_len"] % tp == 0
+    big = cfg.param_count() > 2e10
+    resid_sp = big and shape["seq_len"] % tp == 0
+    w2d = ba if (big and ba and cfg.d_model % dp == 0) else ()
+    return lm_rules(batch_axes=ba, tp="model", sp=sp, resid_sp=resid_sp,
+                    w2d_axes=w2d, **flags)
+
+
+def make_lm_step(cfg, shape: dict, mesh=None, multi_pod=False,
+                 rules: Rules | None = None, mb_override: int | None = None,
+                 remat_override: str | None = None) -> StepBundle:
+    from repro.models.lm import transformer as tf
+
+    if mesh is not None and cfg.param_count() > 2e10 and \
+            shape["kind"] == "train":
+        # large models: full remat — saved-dot residuals don't fit HBM
+        cfg = dataclasses.replace(cfg, remat="full")
+    if remat_override is not None:
+        cfg = dataclasses.replace(cfg, remat=remat_override)
+    rules = _lm_rules(cfg, shape, mesh, multi_pod) if rules is None else rules
+    pspecs = jax.eval_shape(partial(tf.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pshard = tf.shard_params_rules(cfg, rules)
+    b, s = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    meta = dict(params=cfg.param_count(), active=cfg.active_param_count())
+
+    if kind == "train":
+        # trillion-param models: bf16 optimizer states (m/v) or the state
+        # alone exceeds the pod's HBM (see EXPERIMENTS.md §Dry-run)
+        ocfg = (dataclasses.replace(OPT_CFG, state_dtype=jnp.bfloat16)
+                if cfg.param_count() > 1e11 else OPT_CFG)
+        ospecs = jax.eval_shape(partial(opt.init, cfg=ocfg), pspecs)
+        oshard = {"m": pshard, "v": pshard, "step": P()}
+        tok = _sds((b, s + 1), jnp.int32)
+        # gradient accumulation for large models: 4 microbatches bound the
+        # activation working set; grads accumulate param-sharded
+        mb = 4 if (cfg.param_count() > 2e10 and b % 4 == 0) else 1
+        if mb_override is not None:
+            mb = mb_override
+        acc_dt = jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32
+
+        def train_fn(params, opt_state, tokens):
+            if mb == 1:
+                loss, grads = jax.value_and_grad(tf.loss_fn)(
+                    params, tokens, cfg, rules)
+            else:
+                tb = tokens.reshape(mb, b // mb, s + 1)
+
+                def one(acc, tok_mb):
+                    l_acc, g_acc = acc
+                    l, g = jax.value_and_grad(tf.loss_fn)(params, tok_mb,
+                                                          cfg, rules)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(acc_dt), g_acc, g)
+                    return (l_acc + l, g_acc), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+                (loss, grads), _ = jax.lax.scan(
+                    one, (jnp.float32(0.0), zero), tb)
+                loss = loss / mb
+                grads = jax.tree.map(lambda g: g / mb, grads)
+            params, opt_state, stats = opt.update(grads, opt_state, params,
+                                                  ocfg)
+            return params, opt_state, loss, stats["grad_norm"]
+
+        return StepBundle(
+            train_fn, (pspecs, ospecs, tok),
+            _named(mesh, (pshard, oshard, rules.get("tok_bt", P()))),
+            donate_argnums=(0, 1), model_flops=lm_model_flops(cfg, shape),
+            meta=meta, loop_scale=cfg.n_layers * mb)
+
+    if kind == "prefill":
+        tok = _sds((b, s), jnp.int32)
+
+        def prefill_fn(params, tokens):
+            logits, caches, _ = tf.forward(params, tokens, cfg, rules,
+                                           return_cache=True)
+            return logits[:, -1, :], caches
+
+        return StepBundle(prefill_fn, (pspecs, tok),
+                          _named(mesh, (pshard, rules.get("tok_bt", P()))),
+                          donate_argnums=(),
+                          model_flops=lm_model_flops(cfg, shape), meta=meta,
+                          loop_scale=cfg.n_layers)
+
+    # decode
+    cache_sds = _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd),
+                     jnp.bfloat16)
+    tok = _sds((b, 1), jnp.int32)
+    ln = _sds((), jnp.int32)
+    cache_spec = rules.get("kv_cache", P())
+
+    def serve_fn(params, token, k_cache, v_cache, cache_len):
+        logits, (k2, v2), new_len = tf.decode(
+            params, token, (k_cache, v_cache), cache_len, cfg, rules)
+        return logits, k2, v2, new_len
+
+    return StepBundle(
+        serve_fn, (pspecs, tok, cache_sds, cache_sds, ln),
+        _named(mesh, (pshard, rules.get("tok_bt", P()), cache_spec,
+                      cache_spec, P())),
+        donate_argnums=(2, 3), model_flops=lm_model_flops(cfg, shape),
+        meta=meta, loop_scale=cfg.n_layers)
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+def _gnn_module(spec_module: str):
+    import importlib
+
+    return importlib.import_module(f"repro.models.gnn.{spec_module}")
+
+
+def gnn_model_flops(cfg, shape: dict) -> float:
+    """Rough per-layer message/update matmul count."""
+    d = getattr(cfg, "d_hidden", 64)
+    l = cfg.n_layers
+    if shape["kind"] == "full":
+        n, e = shape["n_nodes"], 2 * shape["n_edges"]
+    elif shape["kind"] == "minibatch":
+        seeds = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        n = seeds * (1 + f1 + f1 * f2)
+        e = 2 * seeds * (f1 + f1 * f2)
+    else:
+        n = shape["batch"] * shape["n_nodes"]
+        e = 2 * shape["batch"] * shape["n_edges"]
+    name = type(cfg).__name__
+    if name == "GINConfig":          # gather-add per edge, 2-layer MLP/node
+        per_edge, per_node = 2 * d, 2 * 2 * d * d
+    elif name == "PNAConfig":        # pre-MLP per edge, wide post per node
+        per_edge, per_node = 2 * (2 * d) * d, 2 * (13 * d) * d
+    elif name == "EGNNConfig":       # phi_e per edge (2 layers), phi_h/node
+        per_edge, per_node = 2 * 2 * d * d * 2, 2 * 2 * d * d
+    else:                            # EquiformerV2: SO(2) conv per edge
+        c = d
+        l0 = cfg.l_max + 1
+        so2 = 2 * (l0 * c) ** 2
+        for m in range(1, cfg.m_max + 1):
+            so2 += 4 * 2 * ((cfg.l_max + 1 - m) * c) ** 2
+        wig = 2 * sum((2 * ll + 1) ** 2 for ll in range(cfg.l_max + 1)) * c
+        per_edge, per_node = so2 + 2 * wig, 2 * 2 * c * c * (l0 ** 2)
+    return 3.0 * l * (e * per_edge + n * per_node)          # fwd+bwd ~ 3x
+
+
+def _mk_graph_arrays(shape: dict, cfg, batch_lead: int | None):
+    f, ncls = shape["d_feat"], shape["n_classes"]
+    if shape["kind"] == "minibatch":
+        seeds = shape["batch_nodes"] // (batch_lead or 1)
+        f1, f2 = shape["fanout"]
+        n = seeds * (1 + f1 + f1 * f2)
+        e = 2 * seeds * (f1 + f1 * f2)
+        lead = (batch_lead,) if batch_lead else ()
+        return dict(
+            feats=_sds((*lead, n, f), jnp.float32),
+            edge_index=_sds((*lead, 2, e), jnp.int32),
+            edge_mask=_sds((*lead, e), jnp.bool_),
+            labels=_sds((*lead, n), jnp.int32),
+            label_mask=_sds((*lead, n), jnp.bool_),
+            positions=_sds((*lead, n, 3), jnp.float32),
+        ), n
+    if shape["kind"] == "batched":
+        b, n, e = shape["batch"], shape["n_nodes"], 2 * shape["n_edges"]
+        return dict(
+            feats=_sds((b, n, f), jnp.float32),
+            edge_index=_sds((b, 2, e), jnp.int32),
+            edge_mask=_sds((b, e), jnp.bool_),
+            labels=_sds((b,), jnp.int32),
+            label_mask=_sds((b,), jnp.bool_),
+            positions=_sds((b, n, 3), jnp.float32),
+        ), n
+    n, e = shape["n_nodes"], 2 * shape["n_edges"]
+    return dict(
+        feats=_sds((n, f), jnp.float32),
+        edge_index=_sds((2, e), jnp.int32),
+        edge_mask=_sds((e,), jnp.bool_),
+        labels=_sds((n,), jnp.int32),
+        label_mask=_sds((n,), jnp.bool_),
+        positions=_sds((n, 3), jnp.float32),
+    ), n
+
+
+def make_gnn_step(spec: ArchSpec, cfg, shape: dict, mesh=None,
+                  multi_pod=False, engine_rf: float = 4.0,
+                  sync_dtype: str = "float32") -> StepBundle:
+    from repro.models.gnn.common import GraphData
+
+    mod = _gnn_module(spec.model_module)
+    graph_level = shape["kind"] == "batched"
+    cfg = dataclasses.replace(cfg, d_feat=shape["d_feat"],
+                              n_classes=shape["n_classes"],
+                              graph_level=graph_level)
+    ba = _batch_axes(multi_pod)
+    all_axes = (*ba, "model") if mesh is not None else ()
+    if shape["kind"] == "full" and mesh is not None:
+        # NE-partitioned vertex-cut engine (see launch/gnn_engine.py):
+        # explicit all_to_all sized by replication factor — the paper's
+        # placement is the distribution substrate.
+        from repro.launch import gnn_engine as ge
+
+        caps = dataclasses.replace(ge.synth_caps(shape, mesh.size,
+                                                 rf=engine_rf),
+                                   sync_dtype=sync_dtype)
+        arrays = ge.engine_array_specs(caps, positions=True)
+        pspecs = jax.eval_shape(partial(_gnn_module(spec.model_module)
+                                        .init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+        ospecs = jax.eval_shape(partial(opt.init, cfg=OPT_CFG), pspecs)
+        loss_fn = ge.make_engine_loss(spec.model_module, cfg, caps, mesh,
+                                      all_axes, has_positions=True)
+
+        def train_fn(params, opt_state, arrays):
+            loss, grads = jax.value_and_grad(loss_fn)(params, arrays)
+            params, opt_state, stats = opt.update(grads, opt_state, params,
+                                                  OPT_CFG)
+            return params, opt_state, loss, stats["grad_norm"]
+
+        pshard = _replicated_specs(pspecs)
+        oshard = {"m": pshard, "v": pshard, "step": P()}
+        ashard = {k: P(all_axes, *([None] * (len(v.shape) - 1)))
+                  for k, v in arrays.items()}
+        nch = (cfg.n_layers * max(1, -(-2 * caps.c_edges // 16384))
+               if spec.model_module == "equiformer_v2" else 1)
+        return StepBundle(
+            train_fn, (pspecs, ospecs, arrays),
+            _named(mesh, (pshard, oshard, ashard)),
+            donate_argnums=(0, 1), model_flops=gnn_model_flops(cfg, shape),
+            meta=dict(engine_caps=dataclasses.asdict(caps)),
+            loop_scale=nch)
+    if shape["kind"] == "minibatch":
+        dp = int(np.prod([mesh.shape[a] for a in ba])) if mesh is not None \
+            else 1
+        arrays, n_nodes = _mk_graph_arrays(shape, cfg, batch_lead=dp)
+        lead_spec = P(ba)
+        vmapped = True
+    elif shape["kind"] == "batched":
+        arrays, n_nodes = _mk_graph_arrays(shape, cfg, None)
+        lead_spec = P(ba)
+        vmapped = True
+    else:
+        arrays, n_nodes = _mk_graph_arrays(shape, cfg, None)
+        lead_spec = P(all_axes)   # nodes/edges sharded over every device
+        vmapped = False
+
+    pspecs = jax.eval_shape(partial(mod.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    ospecs = jax.eval_shape(partial(opt.init, cfg=OPT_CFG), pspecs)
+
+    def single_loss(params, feats, edge_index, edge_mask, labels,
+                    label_mask, positions):
+        gids = (jnp.zeros((feats.shape[0],), jnp.int32) if graph_level
+                else None)
+        g = GraphData(feats.astype(jnp.float32), edge_index, edge_mask,
+                      positions=positions, graph_ids=gids, n_graphs=1)
+        logits = mod.forward(params, g, cfg)
+        if graph_level:    # vmapped: one graph, scalar label
+            return cross_entropy(logits[None], labels.reshape(1, 1),
+                                 label_mask.reshape(1, 1).astype(jnp.float32))
+        return cross_entropy(logits[None], labels[None],
+                             label_mask[None].astype(jnp.float32))
+
+    def loss_all(params, a):
+        if vmapped:
+            losses = jax.vmap(partial(single_loss, params))(
+                a["feats"], a["edge_index"], a["edge_mask"], a["labels"],
+                a["label_mask"], a["positions"])
+            return losses.mean()
+        return single_loss(params, a["feats"], a["edge_index"],
+                           a["edge_mask"], a["labels"], a["label_mask"],
+                           a["positions"])
+
+    def train_fn(params, opt_state, arrays):
+        loss, grads = jax.value_and_grad(loss_all)(params, arrays)
+        params, opt_state, stats = opt.update(grads, opt_state, params,
+                                              OPT_CFG)
+        return params, opt_state, loss, stats["grad_norm"]
+
+    if vmapped:
+        ashard = {k: P(lead_spec[0], *([None] * (len(v.shape) - 1)))
+                  for k, v in arrays.items()}
+    else:
+        ashard = {
+            "feats": P(all_axes, None), "edge_index": P(None, all_axes),
+            "edge_mask": P(all_axes), "labels": P(all_axes),
+            "label_mask": P(all_axes), "positions": P(all_axes, None),
+        }
+    pshard = _replicated_specs(pspecs)
+    oshard = {"m": pshard, "v": jax.tree.map(lambda _: P(), ospecs["v"]),
+              "step": P()}
+    return StepBundle(
+        train_fn, (pspecs, ospecs, arrays),
+        _named(mesh, (pshard, oshard, ashard)),
+        donate_argnums=(0, 1), model_flops=gnn_model_flops(cfg, shape),
+        meta=dict(n_nodes=n_nodes))
+
+
+# ===========================================================================
+# recsys family
+# ===========================================================================
+
+def recsys_model_flops(cfg, shape: dict) -> float:
+    d_in = cfg.n_fields * cfg.embed_dim
+    mlp = 0
+    dims = [d_in, *cfg.mlp_dims, 1]
+    for a, b_ in zip(dims[:-1], dims[1:]):
+        mlp += 2 * a * b_
+    per_row = mlp + cfg.n_fields * cfg.embed_dim * 4
+    if shape["kind"] == "train":
+        return 3.0 * shape["batch"] * per_row
+    if shape["kind"] == "serve":
+        return 1.0 * shape["batch"] * per_row
+    return per_row + 2.0 * shape["n_candidates"] * cfg.embed_dim
+
+
+def make_recsys_step(cfg, shape: dict, mesh=None, multi_pod=False
+                     ) -> StepBundle:
+    from repro.models.recsys import deepfm
+
+    ba = _batch_axes(multi_pod)
+    pspecs = jax.eval_shape(partial(deepfm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pshard = _replicated_specs(pspecs)
+    pshard["table"] = P("model", None) if mesh is not None else P()
+    pshard["w1"] = P("model", None) if mesh is not None else P()
+    pshard["item_tower"] = P("model", None) if mesh is not None else P()
+    b = shape["batch"]
+    x = _sds((b, cfg.n_fields), jnp.int32)
+    kind = shape["kind"]
+    mf = recsys_model_flops(cfg, shape)
+
+    if kind == "train":
+        ospecs = jax.eval_shape(partial(opt.init, cfg=OPT_CFG), pspecs)
+        oshard = {"m": pshard, "v": dict(pshard), "step": P()}
+        y = _sds((b,), jnp.float32)
+
+        def train_fn(params, opt_state, xb, yb):
+            loss, grads = jax.value_and_grad(deepfm.loss_fn)(params, xb, yb,
+                                                             cfg)
+            params, opt_state, stats = opt.update(grads, opt_state, params,
+                                                  OPT_CFG)
+            return params, opt_state, loss, stats["grad_norm"]
+
+        return StepBundle(train_fn, (pspecs, ospecs, x, y),
+                          _named(mesh, (pshard, oshard, P(ba, None), P(ba))),
+                          donate_argnums=(0, 1), model_flops=mf,
+                          meta={})
+    if kind == "serve":
+        def serve_fn(params, xb):
+            return deepfm.forward(params, xb, cfg)
+
+        return StepBundle(serve_fn, (pspecs, x),
+                          _named(mesh, (pshard, P(ba, None))),
+                          donate_argnums=(), model_flops=mf, meta={})
+
+    def retrieval_fn(params, xb):
+        return deepfm.retrieval_scores(params, xb, cfg)
+
+    return StepBundle(retrieval_fn, (pspecs, x),
+                      _named(mesh, (pshard, P(None, None))),
+                      donate_argnums=(), model_flops=mf, meta={})
+
+
+# ===========================================================================
+
+def make_step(spec: ArchSpec, shape_id: str, mesh=None, multi_pod=False,
+              smoke: bool = False, shape_override: dict | None = None
+              ) -> StepBundle:
+    from repro.configs.shapes import FAMILY_SHAPES, SMOKE_SHAPES
+
+    cfg = spec.smoke_config if smoke else spec.config
+    if shape_override is not None:
+        shape = shape_override
+    elif smoke:
+        kind = FAMILY_SHAPES[spec.family][shape_id]["kind"]
+        shape = dict(SMOKE_SHAPES[spec.family][kind])
+        if spec.family == "gnn":
+            base = FAMILY_SHAPES[spec.family][shape_id]
+            shape["kind"] = base["kind"]
+            if base["kind"] == "batched":
+                shape = dict(SMOKE_SHAPES["gnn"]["batched"])
+            elif base["kind"] == "minibatch":
+                shape = dict(SMOKE_SHAPES["gnn"]["minibatch"])
+            else:
+                shape = dict(SMOKE_SHAPES["gnn"]["full"])
+    else:
+        shape = dict(FAMILY_SHAPES[spec.family][shape_id])
+
+    if spec.family == "lm":
+        return make_lm_step(cfg, shape, mesh, multi_pod)
+    if spec.family == "gnn":
+        return make_gnn_step(spec, cfg, shape, mesh, multi_pod)
+    return make_recsys_step(cfg, shape, mesh, multi_pod)

@@ -1,0 +1,89 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 [--ckpt-dir ckpts] [--resume]
+
+On the CPU container this trains the arch's *smoke-scale* config on
+synthetic data through the full production path (step builder → jit →
+fault-tolerant trainer loop → checkpoints); on a real TPU slice the same
+entry point takes ``--full`` and the production mesh from
+``repro.launch.mesh.make_production_mesh``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.configs.shapes import FAMILY_SHAPES, SMOKE_SHAPES
+from repro.launch.steps import OPT_CFG, make_step
+from repro.train import optimizer as opt
+from repro.train.trainer import TrainLoopConfig, run_training
+
+
+def synthetic_batch(spec, shape, cfg, rng):
+    if spec.family == "lm":
+        return jnp.asarray(rng.integers(
+            0, cfg.vocab, (shape["global_batch"], shape["seq_len"] + 1)
+        ).astype(np.int32))
+    raise SystemExit("use examples/train_gnn_partitioned.py for GNN "
+                     "training and benchmarks for recsys — this launcher "
+                     "drives the LM train path")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full config + production mesh (TPU slice)")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family != "lm":
+        synthetic_batch(spec, {}, None, None)  # raises with guidance
+    if args.full:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+        cfg = spec.config
+        shape = dict(FAMILY_SHAPES["lm"]["train_4k"])
+    else:
+        mesh = None
+        cfg = spec.smoke_config
+        shape = dict(SMOKE_SHAPES["lm"]["train"])
+
+    bundle = make_step(spec, "train_4k", mesh=mesh, smoke=not args.full)
+    from repro.models.lm.transformer import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params, OPT_CFG)
+    step_fn = jax.jit(bundle.fn, donate_argnums=bundle.donate_argnums,
+                      in_shardings=bundle.in_shardings)
+
+    rng = np.random.default_rng(0)
+
+    def batches():
+        while True:
+            yield synthetic_batch(spec, shape, cfg, rng)
+
+    def wrapped(params, state, batch):
+        params, state, loss, gnorm = step_fn(params, state, batch)
+        return params, state, loss, gnorm
+
+    tcfg = TrainLoopConfig(total_steps=args.steps,
+                           ckpt_every=args.ckpt_every,
+                           ckpt_dir=args.ckpt_dir, log_every=10)
+    params, state, hist = run_training(wrapped, params, state, batches(),
+                                       tcfg, resume=not args.no_resume)
+    print(f"done: loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f} "
+          f"over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""GNN substrate: message passing via segment ops over an edge index.
+
+JAX has no sparse message-passing primitive (BCOO only) — scatter/gather
+over an (2, E) edge index with ``jax.ops.segment_*`` IS the implementation,
+as required by the assignment.  All models operate on a single padded graph
+(vmap for batched small-graph cells):
+
+  node_feats: (N, F)        edge_index: (2, E) int32 (src, dst)
+  edge_mask:  (E,) bool     padding edges point at node N-1 with mask=False
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphData:
+    """Graph container (pytree; ``n_graphs`` is static metadata)."""
+    node_feats: Array         # (N, F)
+    edge_index: Array         # (2, E) directed (src → dst); undirected graphs
+    edge_mask: Array          # (E,) bool       are stored with both directions
+    labels: Array | None = None
+    positions: Array | None = None      # (N, 3) for E(n)/SO(3) models
+    graph_ids: Array | None = None      # (N,) for graph-level readout
+    n_graphs: int = 1
+
+
+def segment_agg(msgs: Array, dst: Array, num_nodes: int, op: str = "sum",
+                mask: Array | None = None) -> Array:
+    if mask is not None:
+        if op in ("sum", "mean"):
+            msgs = jnp.where(mask[:, None], msgs, 0.0)
+        elif op == "max":
+            msgs = jnp.where(mask[:, None], msgs, -jnp.inf)
+        elif op == "min":
+            msgs = jnp.where(mask[:, None], msgs, jnp.inf)
+        dst = jnp.where(mask, dst, num_nodes)
+    if op == "sum":
+        out = jax.ops.segment_sum(msgs, dst, num_segments=num_nodes + 1)
+    elif op == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=num_nodes + 1)
+        c = jax.ops.segment_sum(jnp.ones((msgs.shape[0],), msgs.dtype), dst,
+                                num_segments=num_nodes + 1)
+        out = s / jnp.maximum(c[:, None], 1.0)
+    elif op == "max":
+        out = jax.ops.segment_max(msgs, dst, num_segments=num_nodes + 1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    elif op == "min":
+        out = jax.ops.segment_min(msgs, dst, num_segments=num_nodes + 1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(op)
+    return out[:num_nodes]
+
+
+def segment_softmax(scores: Array, dst: Array, num_nodes: int,
+                    mask: Array | None = None) -> Array:
+    """Edge-softmax normalized per destination.  scores: (E, H)."""
+    if mask is not None:
+        scores = jnp.where(mask[:, None], scores, -jnp.inf)
+        dst = jnp.where(mask, dst, num_nodes)
+    mx = jax.ops.segment_max(scores, dst, num_segments=num_nodes + 1)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(scores - mx[dst])
+    ex = jnp.where(jnp.isfinite(ex), ex, 0.0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=num_nodes + 1)
+    return ex / jnp.maximum(den[dst], 1e-16)
+
+
+def degrees(edge_index: Array, num_nodes: int,
+            mask: Array | None = None) -> Array:
+    dst = edge_index[1]
+    ones = jnp.ones((dst.shape[0],), jnp.float32)
+    if mask is not None:
+        ones = ones * mask
+        dst = jnp.where(mask, dst, num_nodes)
+    return jax.ops.segment_sum(ones, dst, num_segments=num_nodes + 1
+                               )[:num_nodes]
+
+
+def graph_readout(node_vals: Array, graph_ids: Array, n_graphs: int,
+                  op: str = "sum") -> Array:
+    if op == "sum":
+        return jax.ops.segment_sum(node_vals, graph_ids,
+                                   num_segments=n_graphs)
+    if op == "mean":
+        s = jax.ops.segment_sum(node_vals, graph_ids, num_segments=n_graphs)
+        c = jax.ops.segment_sum(jnp.ones(node_vals.shape[:1]), graph_ids,
+                                num_segments=n_graphs)
+        return s / jnp.maximum(c[:, None], 1.0)
+    raise ValueError(op)
+
+
+def to_directed_padded(edges: np.ndarray, num_nodes: int,
+                       pad_to: int | None = None):
+    """Undirected edge list → both-direction (2, E') + mask (host-side)."""
+    e = np.asarray(edges)
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    ei = np.stack([src, dst]).astype(np.int32)
+    m = np.ones(ei.shape[1], bool)
+    if pad_to is not None and pad_to > ei.shape[1]:
+        padn = pad_to - ei.shape[1]
+        ei = np.concatenate(
+            [ei, np.full((2, padn), num_nodes - 1, np.int32)], axis=1)
+        m = np.concatenate([m, np.zeros(padn, bool)])
+    return ei, m

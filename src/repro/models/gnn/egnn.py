@@ -1,0 +1,67 @@
+"""EGNN [Satorras et al., ICML'21] — E(n)-equivariant message passing.
+
+  m_ij  = φ_e(h_i, h_j, ‖x_i − x_j‖²)
+  x_i' = x_i + (1/deg) Σ_j (x_i − x_j) · φ_x(m_ij)
+  h_i' = φ_h(h_i, Σ_j m_ij)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_apply, mlp_init
+from repro.models.gnn.common import GraphData, degrees, graph_readout, \
+    segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_feat: int = 32
+    n_classes: int = 2
+    graph_level: bool = False
+
+
+def init_params(key, cfg: EGNNConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "phi_e": mlp_init(k1, [2 * d_in + 1, cfg.d_hidden,
+                                   cfg.d_hidden]),
+            "phi_x": mlp_init(k2, [cfg.d_hidden, cfg.d_hidden, 1]),
+            "phi_h": mlp_init(k3, [d_in + cfg.d_hidden, cfg.d_hidden,
+                                   cfg.d_hidden]),
+        })
+        d_in = cfg.d_hidden
+    return {"layers": layers,
+            "head": mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes])}
+
+
+def forward(params, g: GraphData, cfg: EGNNConfig):
+    h, x = g.node_feats, g.positions
+    n = h.shape[0]
+    src, dst = g.edge_index[0], g.edge_index[1]
+    deg = jnp.maximum(degrees(g.edge_index, n, g.edge_mask), 1.0)
+    for lp in params["layers"]:
+        rel = x[dst] - x[src]                       # messages flow src→dst
+        d2 = (rel * rel).sum(-1, keepdims=True)
+        m = mlp_apply(lp["phi_e"],
+                      jnp.concatenate([h[dst], h[src], d2], -1),
+                      act=jax.nn.silu, final_act=jax.nn.silu)
+        coef = mlp_apply(lp["phi_x"], m, act=jax.nn.silu)
+        x = x + segment_agg(rel * coef, dst, n, "sum",
+                            g.edge_mask) / deg[:, None]
+        agg = segment_agg(m, dst, n, "sum", g.edge_mask)
+        h = mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1),
+                      act=jax.nn.silu)
+    if cfg.graph_level:
+        return mlp_apply(params["head"],
+                         graph_readout(h, g.graph_ids, g.n_graphs, "mean"))
+    return mlp_apply(params["head"], h)

@@ -1,0 +1,49 @@
+"""GIN [Xu et al., ICLR'19] — sum aggregation + learnable ε (gin-tu config)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_apply, mlp_init
+from repro.models.gnn.common import GraphData, graph_readout, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 32
+    n_classes: int = 2
+    graph_level: bool = False          # TU graph classification vs node task
+
+
+def init_params(key, cfg: GINConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append({
+            "mlp": mlp_init(ks[i], [d_in, cfg.d_hidden, cfg.d_hidden]),
+            "eps": jnp.zeros(()),      # learnable ε, init 0 (GIN-ε)
+        })
+        d_in = cfg.d_hidden
+    return {"layers": layers,
+            "head": mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes])}
+
+
+def forward(params, g: GraphData, cfg: GINConfig):
+    h = g.node_feats
+    n = h.shape[0]
+    src, dst = g.edge_index[0], g.edge_index[1]
+    for lp in params["layers"]:
+        agg = segment_agg(h[src], dst, n, "sum", g.edge_mask)
+        h = mlp_apply(lp["mlp"], (1.0 + lp["eps"]) * h + agg,
+                      act=jax.nn.relu)
+        h = jax.nn.relu(h)
+    if cfg.graph_level:
+        pooled = graph_readout(h, g.graph_ids, g.n_graphs, "sum")
+        return mlp_apply(params["head"], pooled)
+    return mlp_apply(params["head"], h)

@@ -1,0 +1,71 @@
+"""PNA [Corso et al., NeurIPS'20] — multi-aggregator (mean/max/min/std) ×
+degree scalers (identity/amplification/attenuation)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_apply, mlp_init
+from repro.models.gnn.common import GraphData, degrees, graph_readout, \
+    segment_agg
+
+AGGS = ("mean", "max", "min", "std")
+N_SCALERS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_feat: int = 32
+    n_classes: int = 2
+    avg_log_deg: float = 2.0           # δ: dataset-level normalizer
+    graph_level: bool = False
+
+
+def init_params(key, cfg: PNAConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append({
+            "pre": mlp_init(ks[i], [2 * d_in, cfg.d_hidden]),
+            "post": mlp_init(jax.random.fold_in(ks[i], 1),
+                             [len(AGGS) * N_SCALERS * cfg.d_hidden + d_in,
+                              cfg.d_hidden]),
+        })
+        d_in = cfg.d_hidden
+    return {"layers": layers,
+            "head": mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes])}
+
+
+def forward(params, g: GraphData, cfg: PNAConfig):
+    h = g.node_feats
+    n = h.shape[0]
+    src, dst = g.edge_index[0], g.edge_index[1]
+    deg = degrees(g.edge_index, n, g.edge_mask)
+    logd = jnp.log1p(deg)[:, None]
+    scalers = (jnp.ones_like(logd), logd / cfg.avg_log_deg,
+               cfg.avg_log_deg / jnp.maximum(logd, 1e-3))
+    for lp in params["layers"]:
+        msg = mlp_apply(lp["pre"], jnp.concatenate([h[src], h[dst]], -1),
+                        act=jax.nn.relu)
+        aggs = []
+        mean = segment_agg(msg, dst, n, "mean", g.edge_mask)
+        aggs.append(mean)
+        aggs.append(segment_agg(msg, dst, n, "max", g.edge_mask))
+        aggs.append(segment_agg(msg, dst, n, "min", g.edge_mask))
+        sq = segment_agg(msg * msg, dst, n, "mean", g.edge_mask)
+        aggs.append(jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-6))
+        stacked = [a * s for a in aggs for s in scalers]
+        h = mlp_apply(lp["post"],
+                      jnp.concatenate(stacked + [h], axis=-1),
+                      act=jax.nn.relu)
+        h = jax.nn.relu(h)
+    if cfg.graph_level:
+        return mlp_apply(params["head"],
+                         graph_readout(h, g.graph_ids, g.n_graphs, "mean"))
+    return mlp_apply(params["head"], h)

@@ -1,0 +1,121 @@
+"""Real spherical-harmonic rotation matrices via the Ivanic–Ruedenberg
+recursion (J. Phys. Chem. 1996, with the published errata).
+
+Builds D^l (2l+1 × 2l+1) for l = 0..l_max directly from a batch of 3×3
+rotation matrices — no Euler angles, no precomputed e3nn constants, fully
+traceable/batchable in JAX.  Real-SH m-ordering is (-l..l); the l=1 block
+equals the cartesian rotation in the (y, z, x) basis.
+
+Used by EquiformerV2's eSCN convolution: rotate features into the edge
+frame (edge direction → +z), do SO(2)-restricted mixing over |m| ≤ m_max,
+rotate back.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def rotation_to_edge_frame(r_hat: Array) -> Array:
+    """Batch of unit vectors (E,3) → rotations (E,3,3) with R @ r_hat = +z."""
+    e = r_hat
+    ref = jnp.where(jnp.abs(e[..., 0:1]) < 0.9,
+                    jnp.array([1.0, 0.0, 0.0]), jnp.array([0.0, 1.0, 0.0]))
+    x = ref - (ref * e).sum(-1, keepdims=True) * e
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    y = jnp.cross(e, x)
+    return jnp.stack([x, y, e], axis=-2)   # rows = image axes: R @ e = z
+
+
+def _sh1_from_rot(rot: Array) -> Array:
+    """l=1 real-SH block (m=-1,0,1 ↔ y,z,x):  D¹_{ij} = R_{p(i),p(j)}."""
+    p = jnp.array([1, 2, 0])
+    return rot[..., p, :][..., :, p]
+
+
+def wigner_d_blocks(rot: Array, l_max: int) -> list[Array]:
+    """Rotation matrices (..., 3, 3) → [D^0, D^1, …, D^l_max]."""
+    blocks = [jnp.ones(rot.shape[:-2] + (1, 1), rot.dtype)]
+    if l_max == 0:
+        return blocks
+    d1 = _sh1_from_rot(rot)
+    blocks.append(d1)
+    r1 = d1  # index offset +1: r1[..., m+1, m'+1]
+
+    for l in range(2, l_max + 1):
+        prev = blocks[l - 1]  # (..., 2l-1, 2l-1), offset l-1
+        dim = 2 * l + 1
+        cols = []
+        for mp in range(-l, l + 1):
+
+            def P(i, m, _mp=mp):
+                # Ivanic–Ruedenberg helper; R^1 indexed by i,1 etc. (offset 1)
+                if _mp == l:
+                    return (r1[..., i + 1, 2] * prev[..., m + l - 1, 2 * l - 2]
+                            - r1[..., i + 1, 0] * prev[..., m + l - 1, 0])
+                if _mp == -l:
+                    return (r1[..., i + 1, 2] * prev[..., m + l - 1, 0]
+                            + r1[..., i + 1, 0]
+                            * prev[..., m + l - 1, 2 * l - 2])
+                return r1[..., i + 1, 1] * prev[..., m + l - 1, _mp + l - 1]
+
+            denom = ((l + mp) * (l - mp)) if abs(mp) < l \
+                else (2 * l) * (2 * l - 1)
+            col = []
+            for m in range(-l, l + 1):
+                u = np.sqrt((l + m) * (l - m) / denom)
+                v = 0.5 * np.sqrt((1.0 + (m == 0)) * (l + abs(m) - 1)
+                                  * (l + abs(m)) / denom) * (1 - 2 * (m == 0))
+                w = -0.5 * np.sqrt((l - abs(m) - 1) * (l - abs(m)) / denom) \
+                    * (1 - (m == 0))
+                term = 0.0
+                if u != 0.0:
+                    term = term + u * P(0, m)
+                if v != 0.0:
+                    if m == 0:
+                        vv = P(1, 1) + P(-1, -1)
+                    elif m > 0:
+                        vv = P(1, m - 1) * np.sqrt(1.0 + (m == 1)) \
+                            - P(-1, -m + 1) * (1.0 - (m == 1))
+                    else:
+                        vv = P(1, m + 1) * (1.0 - (m == -1)) \
+                            + P(-1, -m - 1) * np.sqrt(1.0 + (m == -1))
+                    term = term + v * vv
+                if w != 0.0:
+                    if m > 0:
+                        ww = P(1, m + 1) + P(-1, -m - 1)
+                    else:
+                        ww = P(1, m - 1) - P(-1, -m + 1)
+                    term = term + w * ww
+                col.append(term)
+            cols.append(jnp.stack(col, axis=-1))
+        blocks.append(jnp.stack(cols, axis=-1))  # (..., m, m')
+    return blocks
+
+
+@lru_cache(maxsize=8)
+def sh_offsets(l_max: int) -> tuple[tuple[int, int], ...]:
+    """(start, dim) per l in the flattened (l_max+1)² coefficient layout."""
+    out, s = [], 0
+    for l in range(l_max + 1):
+        out.append((s, 2 * l + 1))
+        s += 2 * l + 1
+    return tuple(out)
+
+
+def apply_blocks(blocks: list[Array], feats: Array,
+                 transpose: bool = False) -> Array:
+    """Block-diagonal apply: feats (..., K, C) with K = (l_max+1)²."""
+    offs = sh_offsets(len(blocks) - 1)
+    outs = []
+    for l, (s, d) in enumerate(offs):
+        b = blocks[l]
+        f = feats[..., s:s + d, :]
+        eq = "...nm,...mc->...nc" if not transpose else "...mn,...mc->...nc"
+        outs.append(jnp.einsum(eq, b, f))
+    return jnp.concatenate(outs, axis=-2)

@@ -1,0 +1,385 @@
+"""LM-family transformer: GQA + RoPE + optional qk-norm + SwiGLU / MoE.
+
+Functional, scan-over-layers (stacked params, one compiled layer body),
+configurable remat, logical-axis sharding via ``repro.dist.sharding.Rules``.
+Supports three lowerings per the assigned shape cells: ``train_step``
+(full-seq fwd+bwd), ``prefill_step`` (full-seq fwd + cache build) and
+``serve_step`` (single-token decode against a KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import NO_RULES, Rules
+from repro.models.common import cross_entropy, dense_init, embed_init, \
+    rms_norm
+from repro.models.lm.moe import MoEConfig, init_moe, moe_block
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    moe: MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: str = "dots"          # none | dots | full
+    attn_chunk: int = 2048       # kv-block size for chunked (flash-style) attn
+    use_chunked_attn_from: int = 8192  # seq length threshold
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, v, hd = self.d_model, self.vocab, self.hd
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd \
+            + self.n_heads * hd * d
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_expert
+        else:
+            ffn = 3 * d * self.d_ff
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() \
+            - self.n_layers * self.moe.n_experts * 3 * d * self.moe.d_expert
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_expert
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_layer(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.hd
+    p = {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, cfg.dtype
+                         ).reshape(d, cfg.n_heads, hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.dtype
+                         ).reshape(d, cfg.n_kv_heads, hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.dtype
+                         ).reshape(d, cfg.n_kv_heads, hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, cfg.dtype
+                         ).reshape(cfg.n_heads, hd, d),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((hd,), cfg.dtype)
+        p["knorm"] = jnp.ones((hd,), cfg.dtype)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[4], d, cfg.moe, cfg.dtype)
+    else:
+        p["wi"] = dense_init(ks[5], d, cfg.d_ff, cfg.dtype)
+        p["wg"] = dense_init(ks[6], d, cfg.d_ff, cfg.dtype)
+        p["wo_ffn"] = dense_init(ks[7], cfg.d_ff, d, cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.vocab, cfg.d_model,
+                                       cfg.dtype)
+    return params
+
+
+def shard_params_rules(cfg: LMConfig, rules: Rules) -> dict:
+    """PartitionSpec pytree matching init_params output."""
+    from jax.sharding import PartitionSpec as P
+
+    def stk(spec):  # stacked layer params get a leading None (layer axis)
+        return P(None, *spec)
+
+    layer = {
+        "ln1": stk(()), "ln2": stk(()),
+        "wq": stk(rules.get("w_q", P())),
+        "wk": stk(rules.get("w_kv", P())),
+        "wv": stk(rules.get("w_kv", P())),
+        "wo": stk(rules.get("w_o", P())),
+    }
+    if cfg.qk_norm:
+        layer["qnorm"] = stk(())
+        layer["knorm"] = stk(())
+    if cfg.moe is not None:
+        # stacked expert tensors are (L, E, d, f): E on TP/EP, dim-2 FSDP
+        we = rules.get("w_expert", P(None, None, None, None))
+        layer["moe"] = {
+            "router": P(None, None, None),
+            "wi": we, "wg": we, "wo": we,
+        }
+    else:
+        layer["wi"] = stk(rules.get("w_ffn_in", P()))
+        layer["wg"] = stk(rules.get("w_ffn_in", P()))
+        layer["wo_ffn"] = stk(rules.get("w_ffn_out", P()))
+    out = {"embed": rules.get("w_embed", P()), "layers": layer,
+           "final_norm": P()}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = rules.get("w_embed", P())
+    return out
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), \
+        x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def full_attention(q: Array, k: Array, v: Array, causal: bool = True):
+    """Plain attention; q:(B,S,H,hd) k,v:(B,T,H,hd)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    s, t = q.shape[1], k.shape[1]
+    if causal:
+        mask = jnp.arange(t)[None, :] <= (jnp.arange(s)[:, None] + (t - s))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, chunk: int,
+                      causal: bool = True):
+    """Online-softmax attention, scanned over KV chunks (flash-style in XLA).
+
+    Peak memory O(S·chunk) instead of O(S²); the Pallas kernel in
+    repro.kernels.flash_attention is the TPU hot-path twin of this.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, kv):
+        m, l, acc, ci = carry
+        kc, vc = kv
+        logits = jnp.einsum("bshd,bthd->bhst", qf, kc.astype(jnp.float32)
+                            ) * scale
+        kpos = ci * chunk + jnp.arange(chunk)
+        valid = kpos < t
+        if causal:
+            valid = valid[None, :] & (kpos[None, :]
+                                      <= (jnp.arange(s)[:, None] + (t - s)))
+            logits = jnp.where(valid[None, None], logits, -jnp.inf)
+        else:
+            logits = jnp.where(valid[None, None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new, ci + 1), None
+
+    init = (jnp.full((b, h, s), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, h, s, hd), jnp.float32),
+            jnp.int32(0))
+    (m, l, acc, _), _ = jax.lax.scan(
+        step, init,
+        (k.reshape(b, n_chunks, chunk, *k.shape[2:]).swapaxes(0, 1),
+         v.reshape(b, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)     # (B,S,H,hd)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array):
+    """q: (B,1,H,hd); caches: (B,Smax,Hkv,hd) — masked single-token attn.
+
+    When the cache sequence dim is sharded (long-context split-KV), the
+    softmax max/sum reductions become cross-shard collectives under GSPMD —
+    flash-decoding for free.
+    """
+    b, smax = k_cache.shape[0], k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = q.shape[2] // hkv
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    # grouped-query einsum — never materialize the repeated KV
+    qg = q.reshape(b, q.shape[1], hkv, g, q.shape[-1])
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(smax) < cache_len                 # (T,) scalar len
+    logits = jnp.where(mask[None, None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache)
+    return out.reshape(b, q.shape[1], hkv * g, q.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# transformer blocks
+# --------------------------------------------------------------------------
+
+def _attn_block(p, x, positions, cfg: LMConfig, rules: Rules,
+                kv_cache=None, cache_len=None):
+    """Returns (out, (k, v)) — k/v are this call's new cache entries."""
+    h = rms_norm(x, p["ln1"])
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", h, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", h, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = rules.cs(q, "act_bthh")
+    if kv_cache is not None:                       # decode: 1 new token
+        k_c, v_c = kv_cache
+        k_c = _cache_insert(k_c, k, cache_len)
+        v_c = _cache_insert(v_c, v, cache_len)
+        o = decode_attention(q, k_c, v_c, cache_len + 1)
+        new_kv = (k_c, v_c)
+    else:
+        kf = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        vf = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        if x.shape[1] >= cfg.use_chunked_attn_from:
+            o = chunked_attention(q, kf, vf, cfg.attn_chunk)
+        else:
+            o = full_attention(q, kf, vf)
+        new_kv = (k, v)
+    o = rules.cs(o, "act_bthh")
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return rules.cs(out, "act_btd"), new_kv
+
+
+def _cache_insert(cache: Array, new: Array, pos: Array) -> Array:
+    """Insert (B,1,H,hd) at position pos (same for all rows)."""
+    b, smax, hkv, hd = cache.shape
+    onehot = (jnp.arange(smax) == pos)[None, :, None, None]
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+def _ffn_block(p, x, cfg: LMConfig, rules: Rules):
+    h = rms_norm(x, p["ln2"])
+    if cfg.moe is not None:
+        return moe_block(p["moe"], h, cfg.moe, rules)
+    gate = jnp.einsum("btd,df->btf", h, p["wg"])
+    up = jnp.einsum("btd,df->btf", h, p["wi"])
+    act = rules.cs(jax.nn.silu(gate) * up, "act_btf")
+    out = rules.cs(jnp.einsum("btf,fd->btd", act, p["wo_ffn"]), "act_btd")
+    return out, jnp.float32(0.0)
+
+
+def _layer(p, x, positions, cfg: LMConfig, rules: Rules,
+           kv_cache=None, cache_len=None):
+    a, new_kv = _attn_block(p, x, positions, cfg, rules, kv_cache, cache_len)
+    x = x + a
+    f, aux = _ffn_block(p, x, cfg, rules)
+    x = x + f
+    return x, new_kv, aux
+
+
+def _maybe_remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def forward(params, tokens, cfg: LMConfig, rules: Rules = NO_RULES,
+            return_cache: bool = False):
+    """Full-sequence forward (train / prefill).  tokens: (B, S)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = rules.cs(x, "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, lp):
+        x, aux_acc = carry
+        fn = _maybe_remat(
+            lambda pp, xx: _layer(pp, xx, positions, cfg, rules), cfg)
+        x, kv, aux = fn(lp, x)
+        return (x, aux_acc + aux), (kv if return_cache else 0)
+
+    (x, aux_total), caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("btd,vd->btv", x, head.astype(cfg.dtype))
+    logits = rules.cs(logits, "logits_btv")
+    return (logits, caches, aux_total) if return_cache \
+        else (logits, aux_total)
+
+
+def decode(params, token, kv_caches, cache_len, cfg: LMConfig,
+           rules: Rules = NO_RULES):
+    """One decode step.  token: (B,1); kv_caches: (k,v) each
+    (L, B, Smax, Hkv, hd); cache_len: () int32."""
+    b = token.shape[0]
+    x = params["embed"].astype(cfg.dtype)[token]
+    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+
+    def body(x, inputs):
+        lp, kc, vc = inputs
+        x, (kc2, vc2), _ = _layer(lp, x, positions, cfg, rules,
+                                  kv_cache=(kc, vc), cache_len=cache_len)
+        return x, (kc2, vc2)
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"],) + kv_caches)
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("btd,vd->btv", x, head.astype(cfg.dtype))
+    return logits, new_caches, cache_len + 1
+
+
+def loss_fn(params, tokens, cfg: LMConfig, rules: Rules = NO_RULES):
+    """Next-token CE (+ MoE aux); tokens: (B, S+1)."""
+    logits, aux = forward(params, tokens[:, :-1], cfg, rules)
+    ce = cross_entropy(logits, tokens[:, 1:])
+    if cfg.moe is not None:
+        return ce + cfg.moe.aux_weight * aux
+    return ce

@@ -1,0 +1,93 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW + SGD,
+global-norm clipping, linear-warmup cosine schedule.
+
+States are plain pytrees → checkpointable/reshardable like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    kind: str = "adamw"          # adamw | sgd
+    state_dtype: Any = jnp.float32   # bf16 halves m/v memory (trillion-param)
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(params, cfg: OptConfig):
+    if cfg.kind == "sgd":
+        return {"step": jnp.zeros((), jnp.int32)}
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype),
+                         params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def update(grads, state, params, cfg: OptConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.clip_norm > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    if cfg.kind == "sgd":
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new_params, {"step": step}, {"lr": lr, "grad_norm": gn}
+
+    b1, b2 = cfg.b1, cfg.b2
+    sd = cfg.state_dtype
+    m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32) + (1 - b1)
+                     * g.astype(jnp.float32)).astype(sd), state["m"], grads)
+    v = jax.tree.map(lambda v_, g: (b2 * v_.astype(jnp.float32) + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32))).astype(sd),
+                     state["v"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_.astype(jnp.float32) / c1) \
+            / (jnp.sqrt(v_.astype(jnp.float32) / c2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,73 @@
+"""Training loop with fault tolerance and straggler posture.
+
+Single-controller JAX: one jitted step, checkpoint-every-N with atomic
+publish and auto-resume.  Fault model (documented for the 1000+-node
+deployment, exercised at host scale in tests):
+
+  node failure   → job restarts, CheckpointManager.restore() on the
+                   (possibly different) mesh; elastic re-shard is tested
+                   in tests/test_checkpoint.py.
+  mid-write kill → tmp-dir rename is atomic; restore() falls back past
+                   corrupt manifests (checksums).
+  stragglers     → steps are globally synchronous (SPMD); mitigation is
+                   *inside* the step: multi-expansion batches equalize
+                   partitioner rounds (paper §5) and microbatch counts are
+                   static.  The loop also tracks a rolling step-time EWMA
+                   and logs outliers (>3×) for operator action.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    log_every: int = 10
+
+
+def run_training(step_fn: Callable, params, opt_state, batch_iter,
+                 cfg: TrainLoopConfig, resume: bool = True,
+                 log: Callable = print) -> tuple[Any, Any, list[dict]]:
+    """step_fn(params, opt_state, batch) -> (params, opt_state, loss, gnorm).
+
+    Returns (params, opt_state, history).
+    """
+    mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+    start = 0
+    if resume and mgr.latest_step() is not None:
+        (params, opt_state), start = mgr.restore((params, opt_state))
+        log(f"[trainer] resumed from step {start}")
+    history = []
+    ewma = None
+    for step in range(start, cfg.total_steps):
+        batch = next(batch_iter)
+        t0 = time.time()
+        params, opt_state, loss, gnorm = step_fn(params, opt_state, batch)
+        jax.block_until_ready(loss)
+        dt = time.time() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if dt > 3.0 * ewma and step > start + 5:
+            log(f"[trainer] straggler step {step}: {dt:.3f}s vs "
+                f"EWMA {ewma:.3f}s")
+        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+            rec = {"step": step, "loss": float(np.asarray(loss)),
+                   "grad_norm": float(np.asarray(gnorm)),
+                   "step_time_s": dt}
+            history.append(rec)
+            log(f"[trainer] step {step}: loss={rec['loss']:.4f} "
+                f"gnorm={rec['grad_norm']:.3f} {dt * 1e3:.0f}ms")
+        if (step + 1) % cfg.ckpt_every == 0 or step == cfg.total_steps - 1:
+            mgr.save(step + 1, (params, opt_state))
+    return params, opt_state, history

@@ -1,0 +1,117 @@
+"""Pallas kernel tests: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import flash_attention, \
+    flash_attention_reference
+from repro.kernels.block_spmm.ops import aggregate_neighbors
+from repro.kernels.block_spmm.ref import spmm_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,t,d,causal", [
+    (64, 64, 32, True), (64, 64, 32, False),
+    (100, 100, 64, True),                      # non-multiple of block
+    (8, 72, 16, False),                        # cross-attention shape
+    (256, 256, 128, True),
+])
+def test_flash_attention_sweep(s, t, d, causal, dtype):
+    if causal and s != t:
+        pytest.skip("causal requires square here")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(s * t + d), 3)
+    q = jax.random.normal(k1, (3, s, d), dtype)
+    k = jax.random.normal(k2, (3, t, d), dtype)
+    v = jax.random.normal(k3, (3, t, d), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_bshd_layout():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 48, 4, 32))
+    k = jax.random.normal(k2, (2, 48, 4, 32))
+    v = jax.random.normal(k3, (2, 48, 4, 32))
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    ref = flash_attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# block-sparse SpMM
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m_edges,f,bm", [
+    (100, 300, 16, 32), (257, 800, 64, 64), (64, 100, 8, 16)])
+def test_block_spmm_sweep(n, m_edges, f, bm):
+    rng = np.random.default_rng(n + m_edges)
+    edges = rng.integers(0, n, size=(m_edges, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    out = aggregate_neighbors(edges, x, n, bm=bm, bn=bm)
+    ref = spmm_ref(edges, x, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 120), m=st.integers(10, 300),
+       f=st.sampled_from([4, 16, 33]), seed=st.integers(0, 99))
+def test_block_spmm_property(n, m, f, seed):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    if edges.shape[0] == 0:
+        return
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    out = aggregate_neighbors(edges, x, n, bm=16, bn=16)
+    ref = spmm_ref(edges, x, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# embedding bag
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("v,d,b,k", [(50, 16, 8, 4), (1000, 64, 32, 10),
+                                     (128, 128, 5, 1)])
+def test_embedding_bag_sweep(v, d, b, k, dtype):
+    rng = np.random.default_rng(v + b)
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32)
+                        ).astype(dtype)
+    ids = jnp.asarray(rng.integers(0, v, size=(b, k)).astype(np.int32))
+    w = jnp.asarray((rng.random((b, k)) > 0.2).astype(np.float32))
+    out = embedding_bag(table, ids, w)
+    ref = embedding_bag_ref(table, ids, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_embedding_bag_mean_mode():
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 40, size=(6, 5)).astype(np.int32))
+    out = embedding_bag(table, ids, mode="mean")
+    ref = table[ids].mean(axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)

@@ -1,0 +1,162 @@
+"""Unit + property tests for the Distributed NE core (paper §3–§6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NEConfig, evaluate, from_edges, partition, \
+    theorem1_upper_bound
+from repro.core.baselines import dbh, grid_2d, hdrf, oblivious, random_1d
+from repro.core.metrics import vertex_replicas
+from repro.core.sequential_ne import sequential_ne
+from repro.graphs.rmat import rmat
+from repro.graphs.generators import erdos_renyi, ring_plus_complete
+
+
+@pytest.fixture(scope="module")
+def small_rmat():
+    return rmat(10, 8, seed=3)  # 1024 vertices, ~5.5k edges
+
+
+@pytest.fixture(scope="module")
+def small_result(small_rmat):
+    return partition(small_rmat, NEConfig(num_partitions=8, seed=0))
+
+
+def _check_invariants(g, res, cfg):
+    e = np.asarray(g.edges)
+    n, m, p = g.num_vertices, g.num_edges, cfg.num_partitions
+    # every edge assigned to exactly one partition
+    assert res.edge_part.shape == (m,)
+    assert (res.edge_part >= 0).all() and (res.edge_part < p).all()
+    # replica sets match an independent recomputation from the assignment
+    vr = vertex_replicas(e, res.edge_part, n, p)
+    np.testing.assert_array_equal(res.vparts.sum(axis=0), vr)
+    # edge counts consistent
+    np.testing.assert_array_equal(
+        res.edges_per_part, np.bincount(res.edge_part, minlength=p))
+    st_ = evaluate(e, res.edge_part, n, p)
+    # Theorem 1: RF ≤ (|E|+|V|+|P|)/|V|
+    assert st_.replication_factor <= theorem1_upper_bound(n, m, p) + 1e-9
+    # α-balance with the paper's one-batch overshoot slack
+    limit = cfg.alpha * m / p
+    max_deg = int(np.asarray(g.degree).max())
+    assert st_.max_part_edges <= limit + max_deg + 1
+
+
+def test_invariants_rmat(small_rmat, small_result):
+    _check_invariants(small_rmat, small_result,
+                      NEConfig(num_partitions=8, seed=0))
+
+
+def test_quality_beats_hashing(small_rmat, small_result):
+    g = small_rmat
+    e = np.asarray(g.edges)
+    rf_ne = evaluate(e, small_result.edge_part, g.num_vertices, 8)\
+        .replication_factor
+    for fn in (random_1d, grid_2d, dbh):
+        rf_b = evaluate(e, fn(g, 8), g.num_vertices, 8).replication_factor
+        assert rf_ne < rf_b, f"NE {rf_ne} not better than {fn.__name__} {rf_b}"
+
+
+def test_multi_expansion_tradeoff(small_rmat):
+    """Fig. 6: λ=1.0 → far fewer rounds, RF no better than λ=0.1."""
+    g = small_rmat
+    r_small = partition(g, NEConfig(num_partitions=8, lam=0.1, seed=0))
+    r_big = partition(g, NEConfig(num_partitions=8, lam=1.0, seed=0))
+    assert r_big.rounds < r_small.rounds
+    e = np.asarray(g.edges)
+    rf_small = evaluate(e, r_small.edge_part, g.num_vertices, 8)\
+        .replication_factor
+    rf_big = evaluate(e, r_big.edge_part, g.num_vertices, 8)\
+        .replication_factor
+    assert rf_small <= rf_big + 0.05
+
+
+def test_determinism(small_rmat):
+    g = small_rmat
+    a = partition(g, NEConfig(num_partitions=4, seed=7))
+    b = partition(g, NEConfig(num_partitions=4, seed=7))
+    np.testing.assert_array_equal(a.edge_part, b.edge_part)
+
+
+def test_two_hop_ablation(small_rmat):
+    """Condition (5) free edges must not hurt quality."""
+    g = small_rmat
+    e = np.asarray(g.edges)
+    with_ = partition(g, NEConfig(num_partitions=8, seed=1, two_hop=True))
+    without = partition(g, NEConfig(num_partitions=8, seed=1, two_hop=False))
+    rf_w = evaluate(e, with_.edge_part, g.num_vertices, 8).replication_factor
+    rf_wo = evaluate(e, without.edge_part, g.num_vertices, 8)\
+        .replication_factor
+    assert rf_w <= rf_wo + 0.05
+
+
+def test_theorem2_tightness():
+    """Ring+complete construction: RF ≤ UB always; UB is attainable-shaped."""
+    g, p = ring_plus_complete(6)
+    res = partition(g, NEConfig(num_partitions=p, alpha=1.01, seed=0))
+    e = np.asarray(g.edges)
+    stt = evaluate(e, res.edge_part, g.num_vertices, p)
+    ub = theorem1_upper_bound(g.num_vertices, g.num_edges, p)
+    assert stt.replication_factor <= ub + 1e-9
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(12, 60),
+    avg=st.floats(1.5, 6.0),
+    p=st.sampled_from([2, 3, 4, 8]),
+    lam=st.sampled_from([0.1, 0.5, 1.0]),
+    seed=st.integers(0, 5),
+)
+def test_property_invariants(n, avg, p, lam, seed):
+    g = erdos_renyi(n, avg, seed=seed)
+    if g.num_edges < p:
+        return
+    cfg = NEConfig(num_partitions=p, lam=lam, seed=seed, k_sel=8,
+                   sel_chunk=2, edge_chunk=64)
+    res = partition(g, cfg)
+    _check_invariants(g, res, cfg)
+
+
+@pytest.mark.parametrize("fn", [random_1d, grid_2d, dbh, hdrf, oblivious])
+def test_baselines_assign_all(small_rmat, fn):
+    ep = fn(small_rmat, 8)
+    assert ep.shape == (small_rmat.num_edges,)
+    assert (ep >= 0).all() and (ep < 8).all()
+
+
+def test_grid_bound_property(small_rmat):
+    """2D hash: a vertex's edges touch ≤ 2√P−1 partitions."""
+    g = small_rmat
+    p = 16
+    ep = grid_2d(g, p)
+    e = np.asarray(g.edges)
+    for v in np.asarray(g.degree).argsort()[-5:]:
+        mask = (e[:, 0] == v) | (e[:, 1] == v)
+        assert len(np.unique(ep[mask])) <= 2 * int(np.sqrt(p)) - 1
+
+
+def test_seed_stability(small_rmat):
+    """Paper §7.2: across 5 random seeds the RF relative std err < 5%."""
+    g = small_rmat
+    e = np.asarray(g.edges)
+    rfs = []
+    for seed in range(5):
+        res = partition(g, NEConfig(num_partitions=8, seed=seed))
+        rfs.append(evaluate(e, res.edge_part, g.num_vertices, 8)
+                   .replication_factor)
+    rfs = np.asarray(rfs)
+    rse = rfs.std(ddof=1) / np.sqrt(5) / rfs.mean()
+    assert rse < 0.05, (rfs, rse)
+
+
+def test_sequential_ne_oracle(small_rmat):
+    g = small_rmat
+    e = np.asarray(g.edges)
+    ep = sequential_ne(e, g.num_vertices, 8, seed=0)
+    assert (ep >= 0).all()
+    rf_seq = evaluate(e, ep, g.num_vertices, 8).replication_factor
+    rf_rand = evaluate(e, random_1d(g, 8), g.num_vertices, 8)\
+        .replication_factor
+    assert rf_seq < rf_rand

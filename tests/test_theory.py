@@ -1,0 +1,50 @@
+"""Theory module tests: zeta, Table 1 closed forms, Theorem 2 construction."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.theory import (expected_rf_dbh, expected_rf_grid,
+                               expected_rf_random, expected_ub_distributed_ne,
+                               riemann_zeta, theorem2_construction)
+
+
+def test_zeta_known_values():
+    assert abs(riemann_zeta(2.0) - math.pi ** 2 / 6) < 1e-9
+    assert abs(riemann_zeta(4.0) - math.pi ** 4 / 90) < 1e-9
+
+
+@pytest.mark.parametrize("alpha,expected", [
+    (2.2, 2.88), (2.4, 2.12), (2.6, 1.88), (2.8, 1.75)])
+def test_table1_distributed_ne_row(alpha, expected):
+    """Paper Table 1, Distributed NE row (|P|=256)."""
+    assert abs(expected_ub_distributed_ne(alpha) - expected) < 0.02
+
+
+@pytest.mark.parametrize("alpha", [2.2, 2.4, 2.6, 2.8])
+def test_table1_paper_ordering(alpha):
+    """Paper Table 1: the D.NE bound beats every baseline row."""
+    from repro.core.theory import PAPER_TABLE1
+    ne = expected_ub_distributed_ne(alpha)
+    for name, row in PAPER_TABLE1.items():
+        if name != "Distributed NE":
+            assert ne < row[alpha]
+
+
+@pytest.mark.parametrize("alpha", [2.4, 2.8])
+def test_estimators_sane(alpha):
+    """First-principles estimators: finite, ≥1, Grid ≤ Random (2√P−1 < P)."""
+    p = 256
+    r = expected_rf_random(alpha, p)
+    g = expected_rf_grid(alpha, p)
+    d = expected_rf_dbh(alpha, p, n_mc=20_000)
+    assert 1.0 <= g <= r
+    assert 1.0 <= d <= r + 1.0
+
+
+def test_theorem2_shapes():
+    n = 5
+    edges, nv, p = theorem2_construction(n)
+    assert nv == n + n * (n - 1) // 2
+    assert edges.shape[0] == n * (n - 1)
+    assert p == n * (n - 1) // 2
