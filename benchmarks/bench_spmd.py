@@ -1,0 +1,45 @@
+"""partition vs partition_spmd: wall-clock + quality on the same graph.
+
+Single-controller vs the shard_map SPMD program over however many host
+devices exist (8 under the CI XLA_FLAGS).  Derived column reports
+replication factor, edge balance and rounds so quality parity is visible
+next to the time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import record, timeit
+
+from repro.core import NEConfig, evaluate, partition
+from repro.dist.partitioner_sm import partition_spmd
+from repro.graphs.rmat import rmat
+
+
+def _run(name, fn, g, cfg):
+    res = fn(g, cfg)                      # warm compile + result for quality
+    t = timeit(lambda: fn(g, cfg), repeats=3, warmup=0)
+    stats = evaluate(np.asarray(g.edges), res.edge_part, g.num_vertices,
+                     cfg.num_partitions)
+    record(f"spmd/{name}", t * 1e6,
+           f"rf={stats.replication_factor:.3f} "
+           f"eb={stats.edge_balance:.3f} rounds={res.rounds}")
+    return stats
+
+
+def main(fast: bool = False):
+    import jax
+
+    scale = 11 if fast else 13
+    g = rmat(scale, 8, seed=3)
+    cfg = NEConfig(num_partitions=8, seed=0, k_sel=128, edge_chunk=1 << 14)
+    st_sc = _run("partition", partition, g, cfg)
+    st_sm = _run(f"partition_spmd_d{len(jax.devices())}", partition_spmd,
+                 g, cfg)
+    record("spmd/rf_gap_pct",
+           abs(st_sm.replication_factor - st_sc.replication_factor)
+           / st_sc.replication_factor * 100, "spmd vs single-controller")
+
+
+if __name__ == "__main__":
+    main()

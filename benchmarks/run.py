@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (bench_apps, bench_elapsed, bench_kernels,
                             bench_lambda_sweep, bench_memory, bench_quality,
                             bench_roads, bench_scaling, bench_sequential,
-                            bench_theory)
+                            bench_spmd, bench_theory)
 
     suites = {
         "theory": lambda: bench_theory.main(),
@@ -31,6 +31,7 @@ def main() -> None:
         "elapsed": lambda: bench_elapsed.main(fast=args.fast),
         "scaling": lambda: bench_scaling.main(fast=args.fast),
         "sequential": lambda: bench_sequential.main(fast=args.fast),
+        "spmd": lambda: bench_spmd.main(fast=args.fast),
         "apps": lambda: bench_apps.main(fast=args.fast),
         "roads": lambda: bench_roads.main(fast=args.fast),
         "kernels": lambda: bench_kernels.main(fast=args.fast),

@@ -52,8 +52,9 @@ def main(steps: int = 300):
     arrays = ge.engine_arrays(sg, feats, labels, np.ones(n, bool), None)
     arrays.pop("positions", None)
 
-    mesh = jax.make_mesh((d,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist import compat
+
+    mesh = compat.make_mesh((d,), ("data",))
     loss_fn = ge.make_engine_loss("gin", cfg, caps, mesh, ("data",),
                                   has_positions=False)
 

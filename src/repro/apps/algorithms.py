@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.apps.engine import (AXIS, ShardedGraph, master_to_mirror,
                                mirror_to_master, scatter_edges)
+from repro.dist import compat
 
 INF = jnp.float32(jnp.inf)
 
@@ -32,7 +33,7 @@ def _unpack(sg: ShardedGraph):
 
 def _mesh(sg: ShardedGraph, mesh):
     if mesh is None:
-        mesh = jax.make_mesh((sg.num_devices,), (AXIS,))
+        mesh = compat.make_mesh((sg.num_devices,), (AXIS,))
     assert mesh.shape[AXIS] == sg.num_devices
     return mesh
 
@@ -77,8 +78,8 @@ def pagerank(sg: ShardedGraph, mesh=None, iters: int = 30,
 
         return jax.lax.fori_loop(0, iters, step, pr)[None]
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=_specs(6),
-                               out_specs=P(AXIS)))
+    fn = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=_specs(6),
+                                  out_specs=P(AXIS)))
     out = np.asarray(fn(*_unpack(sg)))[:, :, 0]
     return _stitch(sg, out, fill=(1.0 - damping) / n)
 
@@ -121,8 +122,8 @@ def _label_propagation(sg: ShardedGraph, mesh, init_fn, relax_add: float,
             cond, step, (val, jnp.bool_(True), jnp.int32(0)))
         return out[None], iters[None]
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=_specs(7),
-                               out_specs=(P(AXIS), P(AXIS))))
+    fn = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=_specs(7),
+                                  out_specs=(P(AXIS), P(AXIS))))
     init_vals = init_fn()
     out, iters = fn(*_unpack(sg), jnp.asarray(init_vals))
     return np.asarray(out)[:, :, 0], int(np.asarray(iters)[0])

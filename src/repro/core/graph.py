@@ -108,6 +108,22 @@ def to_networkx(g: Graph):
     return gx
 
 
+def exclusive_rank(cand: Array, num_targets: int) -> Array:
+    """Per-item exclusive rank among earlier items with the same target.
+
+    ``cand``: (K,) int32 target ids, negatives meaning "no target".
+    Returns (K,) int32: how many earlier items share item i's target —
+    the building block of quota-limited allocation (item i fits iff
+    ``rank[i] < quota[cand[i]]``) and of stable send-buffer slotting.
+    Value at negative-target items is that of target 0; guard with the
+    candidate mask as the callers do.
+    """
+    onehot = cand[:, None] == jnp.arange(num_targets)[None, :]
+    rank = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    return jnp.take_along_axis(rank, jnp.maximum(cand, 0)[:, None],
+                               axis=1)[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # 2D-hash initial distribution (paper §4): edges are uniquely assigned to an
 # allocation process from a √D×√D process grid by hashing both endpoints, so
@@ -139,11 +155,13 @@ def grid_assign(edges: Array, num_devices: int, rows: int | None = None,
 
 
 def shard_edges(edges: np.ndarray, num_devices: int, salt: int = 0,
-                ) -> tuple[np.ndarray, np.ndarray, int]:
+                ) -> tuple[np.ndarray, np.ndarray, int, np.ndarray]:
     """Host-side 2D-hash distribution into equal-length padded shards.
 
-    Returns (shards, masks, capacity): shards is (D, C, 2) int32 with invalid
-    rows = 0, masks is (D, C) bool.
+    Returns (shards, masks, capacity, dev): shards is (D, C, 2) int32 with
+    invalid rows = 0, masks is (D, C) bool, and dev is the (M,) int32
+    per-edge device assignment (``grid_assign``) so callers can stitch
+    shard-order results back to edge order without rehashing.
     """
     dev = np.asarray(grid_assign(jnp.asarray(edges), num_devices, salt=salt))
     counts = np.bincount(dev, minlength=num_devices)
@@ -154,4 +172,4 @@ def shard_edges(edges: np.ndarray, num_devices: int, salt: int = 0,
         rows = edges[dev == d]
         shards[d, : rows.shape[0]] = rows
         masks[d, : rows.shape[0]] = True
-    return shards, masks, cap
+    return shards, masks, cap, dev.astype(np.int32)

@@ -9,7 +9,7 @@ iteration.  One ``jax.lax.while_loop`` step == one paper round:
      empty boundaries re-seed from a random vertex with unallocated edges,
   2. one-hop allocation with deterministic vertex-grain conflict resolution
      (min ``(edges_per_part, partition_id)`` key — the paper's CAS made
-     reproducible; see DESIGN.md §3.1),
+     reproducible; see docs/DESIGN-dist.md, ``partitioner_sm`` step 1),
   3. replica-set updates (the paper's ``SyncVertexAllocations`` — a no-op
      here because the single-controller state is already global; the
      shard_map version in ``repro.dist.partitioner_sm`` does the OR
@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, hash_u32
+from repro.core.graph import Graph, exclusive_rank
 
 Array = jax.Array
 I32_INF = np.iinfo(np.int32).max
@@ -79,14 +79,14 @@ class PartitionResult:
     leftover: int               # edges assigned by the cleanup pass
 
 
-def _enc(count: Array, p: Array, num_partitions: int) -> Array:
+def priority_enc(count: Array, p: Array, num_partitions: int) -> Array:
     """Priority key: smaller edge count wins, then smaller partition id."""
     cap = (I32_INF - num_partitions) // num_partitions - 1
     return jnp.minimum(count, cap) * num_partitions + p
 
 
-def _select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
-                  remaining_c):
+def select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
+                 remaining_c):
     """Selection for a chunk of partitions.  vparts_c: (C, N) bool."""
     n = degree_rest.shape[0]
     bnd = vparts_c & (degree_rest > 0)[None, :] & active_c[:, None]   # (C,N)
@@ -115,29 +115,34 @@ def _select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
     return idx, valid
 
 
-def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
-    n = g.num_vertices
-    m = g.num_edges
+def vertex_claims(cfg: NEConfig, limit: int, vparts: Array,
+                  degree_rest: Array, edges_per_part: Array,
+                  sub: Array) -> Array:
+    """Selection (multi-expansion §5) + vertex-grain claims (Alg. 3).
+
+    Pure function of the *global* round state — the SPMD partitioner calls
+    it with replicated state so every device derives identical claims.
+    Returns (N,) int32 claim keys: ``priority_enc(|E_p|, p)`` for claimed
+    vertices, ``I32_INF`` where no partition claimed the vertex.
+    """
+    n = vparts.shape[0]
     p_num = cfg.num_partitions
-    key, sub = jax.random.split(state.key)
+    active = edges_per_part <= limit                # soft cap (paper Alg. 1)
 
-    active = state.edges_per_part <= limit          # soft cap (paper Alg. 1)
-
-    # --- 1. selection (multi-expansion, paper §5) --------------------------
+    # --- selection (multi-expansion, paper §5) -----------------------------
     c = min(cfg.sel_chunk, p_num)
     n_chunks = (p_num + c - 1) // c
     p_pad = n_chunks * c
     part_ids = jnp.arange(p_pad, dtype=jnp.int32)
     keys = jax.vmap(lambda i: jax.random.fold_in(sub, i))(part_ids)
-    vparts_pad = jnp.pad(state.vparts, ((0, 0), (0, p_pad - p_num)))
+    vparts_pad = jnp.pad(vparts, ((0, 0), (0, p_pad - p_num)))
     active_pad = jnp.pad(active, (0, p_pad - p_num))
 
-    remaining = jnp.pad(limit - state.edges_per_part, (0, p_pad - p_num))
+    remaining = jnp.pad(limit - edges_per_part, (0, p_pad - p_num))
 
     def sel(args):
         pc, ac, kc, rc = args
-        return _select_chunk(pc, ac, state.degree_rest, cfg.lam, cfg.k_sel,
-                             kc, rc)
+        return select_chunk(pc, ac, degree_rest, cfg.lam, cfg.k_sel, kc, rc)
 
     sel_idx, sel_valid = jax.lax.map(
         sel,
@@ -149,15 +154,26 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
     sel_idx = sel_idx.reshape(p_pad, cfg.k_sel)[:p_num]
     sel_valid = sel_valid.reshape(p_pad, cfg.k_sel)[:p_num]
 
-    # --- 2. vertex-grain claims + one-hop allocation (paper Alg. 3) --------
+    # --- vertex-grain claims (paper Alg. 3) --------------------------------
     part_of_row = jnp.broadcast_to(
         jnp.arange(p_num, dtype=jnp.int32)[:, None], sel_idx.shape)
-    claim_keys = _enc(state.edges_per_part[part_of_row.ravel()],
-                      part_of_row.ravel(), p_num)
+    claim_keys = priority_enc(edges_per_part[part_of_row.ravel()],
+                              part_of_row.ravel(), p_num)
     flat_v = jnp.where(sel_valid.ravel(), sel_idx.ravel(), n)   # n → dropped
     vclaim_key = jnp.full((n,), I32_INF, jnp.int32)
-    vclaim_key = vclaim_key.at[flat_v].min(claim_keys, mode="drop")
+    return vclaim_key.at[flat_v].min(claim_keys, mode="drop")
 
+
+def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
+    n = g.num_vertices
+    m = g.num_edges
+    p_num = cfg.num_partitions
+    key, sub = jax.random.split(state.key)
+
+    vclaim_key = vertex_claims(cfg, limit, state.vparts, state.degree_rest,
+                               state.edges_per_part, sub)
+
+    # --- one-hop allocation ------------------------------------------------
     slot_key = vclaim_key[g.slot_src]
     slot_ok = (slot_key < I32_INF) & (state.edge_part[g.adj_eid] < 0)
     slot_key = jnp.where(slot_ok, slot_key, I32_INF)
@@ -190,8 +206,9 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
         u_p = jnp.pad(u, (0, pad))
         v_p = jnp.pad(v, (0, pad))
         un_p = jnp.pad(edge_part < 0, (0, pad))  # pads → False
-        enc_vec = _enc(edges_per_part, jnp.arange(p_num, dtype=jnp.int32),
-                       p_num)  # tie-break by current |E_p| (Alg. 3 line 16)
+        enc_vec = priority_enc(edges_per_part,
+                               jnp.arange(p_num, dtype=jnp.int32),
+                               p_num)  # tie-break by |E_p| (Alg. 3 line 16)
         # free edges only go to partitions still under the α-capacity, and a
         # partition may absorb at most its remaining capacity this round —
         # otherwise one round's free-edge batch around a hub blows up |E_p|
@@ -205,11 +222,8 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
             k2 = jnp.where(inter & unal[:, None], enc_vec[None, :], I32_INF)
             best = k2.min(axis=1)
             cand = jnp.where(best < I32_INF, best % p_num, -1)
-            onehot = (cand[:, None] == jnp.arange(p_num)[None, :])
-            rank = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1  # excl.
-            keep = (cand >= 0) & (jnp.take_along_axis(
-                rank, jnp.maximum(cand, 0)[:, None], axis=1)[:, 0]
-                < quota[jnp.maximum(cand, 0)])
+            rank = exclusive_rank(cand, p_num)
+            keep = (cand >= 0) & (rank < quota[jnp.maximum(cand, 0)])
             out = jnp.where(keep, cand, -1)
             quota = quota - jnp.zeros((p_num,), jnp.int32).at[
                 jnp.maximum(out, 0)].add(keep.astype(jnp.int32))
@@ -261,23 +275,75 @@ def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
     return jax.lax.while_loop(cond, partial(_round, g, cfg, limit), init)
 
 
+def _waterfill(counts: np.ndarray, cap: np.ndarray, k: int) -> np.ndarray:
+    """Per-partition takes for ``k`` unit increments, each going to the
+    currently least-loaded partition with remaining capacity — the greedy
+    computed in closed form (binary search on the fill level) instead of
+    k sequential argmins.  Ties at the final level break by partition id.
+    """
+    take = np.zeros_like(counts)
+    if k <= 0:
+        return take
+
+    def filled(level: int) -> int:
+        return int(np.minimum(np.maximum(level - counts, 0), cap).sum())
+
+    lo, hi = int(counts.min()), int(counts.max()) + k + 1
+    while lo < hi:                  # largest level with filled(level) <= k
+        mid = (lo + hi + 1) // 2
+        if filled(mid) <= k:
+            lo = mid
+        else:
+            hi = mid - 1
+    take = np.minimum(np.maximum(lo - counts, 0), cap)
+    spill = k - int(take.sum())
+    if spill > 0:
+        room = np.nonzero((take < cap) & (counts + take == lo))[0]
+        take[room[:spill]] += 1
+    return take
+
+
+def cleanup_leftovers(edge_part: np.ndarray, vparts: np.ndarray,
+                      counts: np.ndarray, edges: np.ndarray,
+                      num_partitions: int, limit: int) -> int:
+    """Assign unallocated edges (the max_rounds safety hatch), in place.
+
+    Leftovers water-fill the least-loaded partitions while they are under
+    the α-capacity ``limit``; only when every partition is at capacity does
+    the overflow water-fill freely (still least-loaded first), so balance
+    degrades as slowly as possible.  Returns the number of edges assigned.
+    """
+    rem = np.nonzero(edge_part < 0)[0]
+    if rem.size == 0:
+        return 0
+    c64 = counts.astype(np.int64)
+    free = np.maximum(limit - c64, 0)
+    k_capped = min(int(rem.size), int(free.sum()))
+    take = _waterfill(c64, free, k_capped)
+    overflow = int(rem.size) - k_capped
+    if overflow:
+        no_cap = np.full(num_partitions, overflow, np.int64)
+        take = take + _waterfill(c64 + take, no_cap, overflow)
+    tgt = np.repeat(np.arange(num_partitions, dtype=np.int32), take)
+    edge_part[rem] = tgt
+    counts += take.astype(counts.dtype)
+    vparts[edges[rem, 0], tgt] = True
+    vparts[edges[rem, 1], tgt] = True
+    return int(rem.size)
+
+
 def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
     """Run Distributed NE.  Returns host-side result with cleanup applied."""
     cfg = cfg.clamped(g.num_vertices)
     state = jax.block_until_ready(_partition_jit(g, cfg))
-    edge_part = np.asarray(state.edge_part)
-    vparts = np.asarray(state.vparts)
-    counts = np.asarray(state.edges_per_part)
-    leftover = int((edge_part < 0).sum())
-    if leftover:  # max_rounds safety hatch: least-loaded hash assignment
-        rem = np.nonzero(edge_part < 0)[0]
-        order = np.argsort(counts, kind="stable")
-        tgt = order[np.asarray(hash_u32(jnp.asarray(rem))) %
-                    max(1, cfg.num_partitions // 4 or 1)]
-        edge_part[rem] = tgt
-        np.add.at(counts, tgt, 1)
-        e = np.asarray(g.edges)
-        vparts[e[rem, 0], tgt] = True
-        vparts[e[rem, 1], tgt] = True
+    # np.array copies: asarray views of jax arrays are read-only, and the
+    # cleanup pass mutates these in place
+    edge_part = np.array(state.edge_part)
+    vparts = np.array(state.vparts)
+    counts = np.array(state.edges_per_part)
+    limit = int(cfg.alpha * g.num_edges / cfg.num_partitions)
+    leftover = cleanup_leftovers(edge_part, vparts, counts,
+                                 np.asarray(g.edges), cfg.num_partitions,
+                                 limit)
     return PartitionResult(edge_part, vparts, counts, int(state.rounds),
                            leftover)

@@ -1,0 +1,73 @@
+"""Version shims for the JAX SPMD API surface.
+
+The repo targets the modern API (``jax.shard_map`` with ``check_vma``,
+``jax.sharding.set_mesh``, ``jax.make_mesh(..., axis_types=...)``).  Older
+jaxlibs — e.g. the 0.4.x toolchain in the reference container (note: CI
+installs an unpinned jax, so it exercises whichever branch resolves) —
+expose the same functionality as ``jax.experimental.shard_map.shard_map``
+with ``check_rep``, the ``Mesh`` context manager, and ``make_mesh``
+without axis types.  This module is the single place where that difference lives;
+everything else imports ``shard_map`` / ``make_mesh`` / ``set_mesh`` from
+here instead of touching ``jax.*`` directly.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "pvary"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jaxlibs, experimental shard_map on old.
+
+    ``check_vma=False`` maps to ``check_rep=False`` on old jaxlibs — both
+    disable the replication/varying-mesh-axes inference that cannot prove
+    invariance through e.g. FSDP ``all_gather`` patterns.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # The legacy replication checker has no rules for while_loop /
+    # all_gather bodies this repo uses, so it stays off here; the modern
+    # check_vma path above keeps the caller's setting.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` as varying over ``axis_names`` inside ``shard_map``.
+
+    Old jaxlibs have no varying-mesh-axes tracking, so this is an
+    identity there (the values already behave as per-device).
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the concept exists."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names), **kwargs)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager entering ``mesh`` as the ambient sharding mesh.
+
+    New jaxlibs: ``jax.sharding.set_mesh``.  Old jaxlibs: a ``Mesh`` is
+    itself a context manager that installs the physical mesh, which is what
+    resolves bare ``PartitionSpec`` sharding constraints under ``jit``.
+    """
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh

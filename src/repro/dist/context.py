@@ -1,0 +1,68 @@
+"""Thread-local mesh/axis registry.
+
+Model code that needs *explicit* collectives (the MoE expert-parallel
+``shard_map`` path, the row-sharded embedding lookup) cannot read axis
+names off a bare ``jax.jit`` — it needs to know which mesh axes carry the
+batch and which carry the model dimension.  ``mesh_context`` registers
+that assignment for the current thread; ``get_mesh_ctx`` returns it (or
+``None``, in which case callers fall back to their single-device path).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Mesh plus the axis-role assignment the models need."""
+
+    mesh: jax.sharding.Mesh
+    batch_axes: tuple[str, ...]
+    model_axis: str
+
+    def __post_init__(self):
+        names = set(self.mesh.axis_names)
+        missing = (set(self.batch_axes) | {self.model_axis}) - names
+        if missing:
+            raise ValueError(f"axes {sorted(missing)} not in mesh axes "
+                             f"{self.mesh.axis_names}")
+
+    @property
+    def dp(self) -> int:
+        """Total data-parallel degree (product of the batch axes)."""
+        out = 1
+        for a in self.batch_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+_tls = threading.local()
+
+
+def get_mesh_ctx() -> MeshCtx | None:
+    """Current thread's mesh context, or None outside ``mesh_context``."""
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, batch_axes=("data",), model_axis: str = "model"):
+    """Register (mesh, batch_axes, model_axis) for the current thread.
+
+    Nests: the previous context is restored on exit, so an inner scope can
+    temporarily re-assign axis roles (e.g. a serve path reusing the train
+    mesh with an empty batch).
+    """
+    prev = get_mesh_ctx()
+    _tls.ctx = MeshCtx(mesh, tuple(batch_axes), model_axis)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev

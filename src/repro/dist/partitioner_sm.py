@@ -1,0 +1,241 @@
+"""SPMD Distributed NE — the paper's §4 algorithm under ``shard_map``.
+
+The input graph is 2D-hash edge-partitioned across devices
+(``core.graph.shard_edges``): device ``d`` holds an equal-length padded
+shard of the undirected edge list and allocates *only its own edges*.
+One while_loop step == one paper round, per device:
+
+  1. **selection** — every device computes the same per-vertex claim keys
+     from the replicated global state (``core.partitioner.vertex_claims``).
+     The paper's per-machine selection collapses to this replicated compute
+     because selection reads only V(E_p), D_rest and |E_p|, all of which
+     are re-synchronized at the end of every round;
+  2. **one-hop allocation** over local edges: edge (u, v) joins the best
+     claiming partition ``min(claim[u], claim[v])`` — identical math to the
+     single-controller ``segment_min`` over CSR slots, restricted to the
+     local shard;
+  3. **SyncVertexAllocations** — the paper's §4 merge, realized as an OR
+     all-reduce of the replica-set deltas plus ``psum`` of the |E_p| and
+     D_rest deltas;
+  4. **two-hop "free edge" allocation** (Condition (5)) over local edges,
+     with the per-round α-capacity quota split deterministically across
+     devices by an exclusive prefix over the device axis (an ``all_gather``
+     of per-device candidate histograms).
+
+Steps 2–4 touch only the local shard, so per-round work scales 1/D; the
+sync in step 3 is the round barrier the paper describes.  Because steps 1–3
+are bit-identical to the single-controller fixed point and only the quota
+*ordering* in step 4 differs, the resulting quality (replication factor)
+matches ``core.partitioner.partition`` closely — asserted by
+tests/test_spmd.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import Graph, exclusive_rank, shard_edges
+from repro.core.partitioner import (I32_INF, NEConfig, PartitionResult,
+                                    cleanup_leftovers, priority_enc,
+                                    vertex_claims)
+from repro.dist import compat
+
+AXIS = "shard"
+Array = jax.Array
+
+
+class SpmdState(NamedTuple):
+    edge_part: Array        # (C,)   int32 per-device shard, -1 = unallocated
+    vparts: Array           # (N, P) bool replica sets — replicated
+    degree_rest: Array      # (N,)   int32 — replicated
+    edges_per_part: Array   # (P,)   int32 — replicated
+    key: Array              # PRNG key — replicated
+    rounds: Array           # ()     int32
+    remaining: Array        # ()     int32 unallocated edges, global
+
+
+def _apply_alloc(new, part, u_loc, v_loc, n, p_num, vparts, degree_rest,
+                 edges_per_part):
+    """Fold one local allocation batch into the replicated state.
+
+    ``psum`` of the per-device deltas + OR of the replica-set delta ==
+    the paper's SyncVertexAllocations.
+    """
+    newi = new.astype(jnp.int32)
+    add = jnp.where(new, part, 0)
+    counts = jnp.zeros((p_num,), jnp.int32).at[add].add(newi)
+    counts = jax.lax.psum(counts, AXIS)
+    drop_u = jnp.where(new, u_loc, n)
+    drop_v = jnp.where(new, v_loc, n)
+    vnew = jnp.zeros_like(vparts)
+    vnew = vnew.at[drop_u, add].set(True, mode="drop")
+    vnew = vnew.at[drop_v, add].set(True, mode="drop")
+    vparts = vparts | (jax.lax.psum(vnew.astype(jnp.int32), AXIS) > 0)
+    dec = (jnp.zeros((n,), jnp.int32)
+           .at[drop_u].add(newi, mode="drop")
+           .at[drop_v].add(newi, mode="drop"))
+    degree_rest = degree_rest - jax.lax.psum(dec, AXIS)
+    return vparts, degree_rest, edges_per_part + counts, counts.sum()
+
+
+def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
+                v_loc: Array, mask_loc: Array, state: SpmdState) -> SpmdState:
+    p_num = cfg.num_partitions
+    key, sub = jax.random.split(state.key)
+
+    # --- 1. replicated selection + claims ----------------------------------
+    vclaim = vertex_claims(cfg, limit, state.vparts, state.degree_rest,
+                           state.edges_per_part, sub)
+
+    # --- 2. one-hop allocation on the local shard --------------------------
+    k_uv = jnp.minimum(vclaim[u_loc], vclaim[v_loc])
+    new1 = mask_loc & (state.edge_part < 0) & (k_uv < I32_INF)
+    part1 = jnp.where(new1, (k_uv % p_num).astype(jnp.int32), -1)
+    edge_part = jnp.where(new1, part1, state.edge_part)
+
+    # --- 3. SyncVertexAllocations ------------------------------------------
+    vparts, degree_rest, edges_per_part, new_total = _apply_alloc(
+        new1, part1, u_loc, v_loc, n, p_num, state.vparts,
+        state.degree_rest, state.edges_per_part)
+
+    # --- 4. two-hop free edges, Condition (5) ------------------------------
+    if cfg.two_hop:
+        enc_vec = priority_enc(edges_per_part,
+                               jnp.arange(p_num, dtype=jnp.int32), p_num)
+        enc_vec = jnp.where(edges_per_part <= limit, enc_vec, I32_INF)
+        quota = jnp.maximum(limit + 1 - edges_per_part, 0)
+        unal = mask_loc & (edge_part < 0)
+        # candidates + local ranks, scanned in edge_chunk-sized chunks so
+        # peak memory is edge_chunk × P, like the single-controller path
+        c_len = u_loc.shape[0]
+        ce = min(cfg.edge_chunk, c_len)
+        n_ec = (c_len + ce - 1) // ce
+        pad = n_ec * ce - c_len
+        u_p = jnp.pad(u_loc, (0, pad))
+        v_p = jnp.pad(v_loc, (0, pad))
+        un_p = jnp.pad(unal, (0, pad))                  # pads → False
+
+        def cand_chunk(counts, args):
+            uu, vv, un = args
+            inter = vparts[uu] & vparts[vv]                       # (ce, P)
+            k2 = jnp.where(inter & un[:, None], enc_vec[None, :], I32_INF)
+            best = k2.min(axis=1)
+            cand_c = jnp.where(best < I32_INF,
+                               (best % p_num).astype(jnp.int32), -1)
+            rank_c = exclusive_rank(cand_c, p_num) \
+                + counts[jnp.maximum(cand_c, 0)]
+            counts = counts.at[jnp.maximum(cand_c, 0)].add(
+                (cand_c >= 0).astype(jnp.int32))
+            return counts, (cand_c, rank_c)
+
+        hist, (cand, myrank) = jax.lax.scan(
+            cand_chunk, jnp.zeros((p_num,), jnp.int32),
+            (u_p.reshape(n_ec, ce), v_p.reshape(n_ec, ce),
+             un_p.reshape(n_ec, ce)))
+        cand = cand.reshape(-1)[:c_len]
+        myrank = myrank.reshape(-1)[:c_len]
+        cand0 = jnp.maximum(cand, 0)
+        # deterministic cross-device quota split: device d's candidates for
+        # partition p rank after all candidates on devices < d.
+        hists = jax.lax.all_gather(hist, AXIS)                    # (D, P)
+        r = jax.lax.axis_index(AXIS)
+        before = jnp.where(jnp.arange(hists.shape[0])[:, None] < r,
+                           hists, 0).sum(axis=0)                  # (P,)
+        keep = (cand >= 0) & (before[cand0] + myrank < quota[cand0])
+        part2 = jnp.where(keep, cand, -1)
+        edge_part = jnp.where(keep, part2, edge_part)
+        vparts, degree_rest, edges_per_part, new2 = _apply_alloc(
+            keep, part2, u_loc, v_loc, n, p_num, vparts, degree_rest,
+            edges_per_part)
+        new_total = new_total + new2
+
+    return SpmdState(edge_part, vparts, degree_rest, edges_per_part, key,
+                     state.rounds + 1, state.remaining - new_total)
+
+
+@partial(jax.jit, static_argnames=("cfg", "limit", "n", "mesh"))
+def _partition_spmd_jit(cfg: NEConfig, limit: int, n: int, mesh,
+                        u_sh: Array, v_sh: Array, mask_sh: Array,
+                        m_total: Array):
+    p_num = cfg.num_partitions
+
+    def body(u_l, v_l, mask_l, m_tot):
+        u_l, v_l, mask_l = u_l[0], v_l[0], mask_l[0]
+        init = SpmdState(
+            edge_part=jnp.full(u_l.shape, -1, jnp.int32),
+            vparts=jnp.zeros((n, p_num), bool),
+            degree_rest=(jnp.zeros((n,), jnp.int32)
+                         .at[u_l].add(mask_l.astype(jnp.int32))
+                         .at[v_l].add(mask_l.astype(jnp.int32))),
+            edges_per_part=jnp.zeros((p_num,), jnp.int32),
+            key=jax.random.PRNGKey(cfg.seed),
+            rounds=jnp.zeros((), jnp.int32),
+            remaining=m_tot,
+        )
+        # D_rest must be global degree, not shard-local degree
+        init = init._replace(
+            degree_rest=jax.lax.psum(init.degree_rest, AXIS))
+
+        def cond(s: SpmdState):
+            return (s.remaining > 0) & (s.rounds < cfg.max_rounds)
+
+        out = jax.lax.while_loop(
+            cond, partial(_spmd_round, cfg, limit, n, u_l, v_l, mask_l),
+            init)
+        return (out.edge_part[None], out.vparts, out.edges_per_part,
+                out.rounds)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P(AXIS, None), P()),
+        out_specs=(P(AXIS, None), P(), P(), P()),
+        check_vma=False,
+    )(u_sh, v_sh, mask_sh, m_total)
+
+
+def partition_spmd(g: Graph, cfg: NEConfig,
+                   num_devices: int | None = None) -> PartitionResult:
+    """Run Distributed NE as an SPMD program over 2D-hash edge shards.
+
+    Returns a host-side :class:`PartitionResult` matching the
+    single-controller :func:`repro.core.partitioner.partition` API.
+    """
+    cfg = cfg.clamped(g.num_vertices)
+    n, m, p_num = g.num_vertices, g.num_edges, cfg.num_partitions
+    d = num_devices or len(jax.devices())
+    d = max(1, min(d, len(jax.devices())))
+    if m == 0:
+        return PartitionResult(np.zeros((0,), np.int32),
+                               np.zeros((n, p_num), bool),
+                               np.zeros((p_num,), np.int32), 0, 0)
+
+    edges = np.asarray(g.edges)
+    shards, masks, _, dev = shard_edges(edges, d)
+    mesh = compat.make_mesh((d,), (AXIS,))
+    limit = int(cfg.alpha * m / p_num)
+    ep_sh, vparts, counts, rounds = jax.block_until_ready(
+        _partition_spmd_jit(cfg, limit, n, mesh,
+                            jnp.asarray(shards[:, :, 0]),
+                            jnp.asarray(shards[:, :, 1]),
+                            jnp.asarray(masks), jnp.int32(m)))
+
+    # stitch shard-order assignments back to global edge order: shard d
+    # holds edges[dev == d] in their original relative order.
+    edge_part = np.full((m,), -1, np.int32)
+    ep_sh = np.asarray(ep_sh)
+    for dd in range(d):
+        idx = np.nonzero(dev == dd)[0]
+        edge_part[idx] = ep_sh[dd, : idx.size]
+
+    # np.array copies: asarray views of jax arrays are read-only, and the
+    # cleanup pass mutates these in place
+    vparts = np.array(vparts)
+    counts = np.array(counts)
+    leftover = cleanup_leftovers(edge_part, vparts, counts, edges, p_num,
+                                 limit)
+    return PartitionResult(edge_part, vparts, counts, int(rounds), leftover)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import compat
 from repro.dist.context import get_mesh_ctx
 
 Array = jax.Array
@@ -83,7 +84,7 @@ def sharded_lookup(table: Array, ids: Array) -> Array:
         emb = jnp.where(hit[..., None], emb, 0.0)
         return jax.lax.psum(emb, ctx.model_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(ctx.model_axis, None), bspec),
         out_specs=P(ba, *([None] * ids.ndim)),

@@ -14,6 +14,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import NEConfig, evaluate, partition  # noqa: E402
+from repro.dist import compat  # noqa: E402
 from repro.dist.partitioner_sm import partition_spmd  # noqa: E402
 from repro.apps.engine import build_sharded_graph  # noqa: E402
 from repro.apps.algorithms import pagerank, sssp, wcc  # noqa: E402
@@ -75,8 +76,7 @@ from repro.models.gnn import egnn as egnn_mod  # noqa: E402
 from repro.models.gnn import equiformer_v2 as eq_mod  # noqa: E402
 from repro.models.gnn.common import GraphData, to_directed_padded  # noqa: E402
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 gsm = barabasi_albert(300, 3, seed=5)
 esm = np.asarray(gsm.edges)
 nsm = gsm.num_vertices
@@ -123,8 +123,7 @@ from jax.sharding import NamedSharding, PartitionSpec as SP  # noqa: E402
 from repro.dist.sharding import lm_rules  # noqa: E402
 from repro.models.lm import transformer as tfm  # noqa: E402
 
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = compat.make_mesh((2, 4), ("data", "model"))
 lcfg = tfm.LMConfig(name="dec", n_layers=2, d_model=32, n_heads=8,
                     n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
                     dtype=jnp.float32, remat="none")
@@ -141,7 +140,7 @@ ref_logits, _, _ = tfm.decode(lp, tok, (kc, vc), clen, lcfg)
 rules = lm_rules(batch_axes=(), tp="model", q_ok=True, kv_ok=False,
                  seq_kv_axes=("data", "model"))
 cache_sh = NamedSharding(mesh2, rules["kv_cache"])
-with jax.sharding.set_mesh(mesh2):
+with compat.set_mesh(mesh2):
     kc_s = jax.device_put(kc, cache_sh)
     vc_s = jax.device_put(vc, cache_sh)
     sh_logits, _, _ = jax.jit(
@@ -160,18 +159,16 @@ mp = init_moe(jax.random.PRNGKey(6), 24, mcfg, jnp.float32)
 xm = jax.random.normal(jax.random.PRNGKey(7), (4, 6, 24))
 y_dense, aux_dense = moe_block(mp, xm, mcfg, None)
 with mesh_context(mesh2, batch_axes=("data",), model_axis="model"), \
-        jax.sharding.set_mesh(mesh2):
+        compat.set_mesh(mesh2):
     y_ep, aux_ep = jax.jit(lambda p, x: moe_block(p, x, mcfg, None))(mp, xm)
 out["moe_ep_err"] = float(jnp.abs(y_dense - y_ep).max())
 out["moe_aux_err"] = float(jnp.abs(aux_dense - aux_ep))
 
 # --- all_to_all edge redistribution: partition p's edges land on device p ---
 from repro.core.graph import shard_edges  # noqa: E402
-from repro.core.graph import grid_assign  # noqa: E402
 from repro.dist.redistribute import redistribute_edges  # noqa: E402
 
-shards_r, masks_r, _ = shard_edges(e, 8, salt=0)
-dev_r = np.asarray(grid_assign(jnp.asarray(e), 8, salt=0))
+shards_r, masks_r, _, dev_r = shard_edges(e, 8, salt=0)
 parts_r = np.zeros(masks_r.shape, np.int32)
 for dd in range(8):
     sel = np.nonzero(dev_r == dd)[0]

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die at collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
 from repro.kernels.flash_attention.ref import attention_ref

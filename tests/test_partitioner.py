@@ -1,7 +1,9 @@
 """Unit + property tests for the Distributed NE core (paper §3–§6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die at collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import NEConfig, evaluate, from_edges, partition, \
     theorem1_upper_bound

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.dist import compat
 from repro.train import optimizer as opt
 from repro.train.checkpoint import CheckpointManager
 from repro.train.compression import init_residuals, psum_compressed
@@ -74,8 +75,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
     mgr = CheckpointManager(tmp_path)
     tree = {"w": jnp.arange(16, dtype=jnp.float32)}
     mgr.save(5, tree)
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("d",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("d"))}
     restored, _ = mgr.restore(tree, shardings=sh)
@@ -115,8 +115,7 @@ def test_trainer_resume(tmp_path):
 
 def test_compression_error_feedback():
     """int8 EF-compression: single-worker psum == identity + residual→0."""
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("d",))
     from jax.sharding import PartitionSpec as P
 
     g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(64,))
@@ -126,7 +125,7 @@ def test_compression_error_feedback():
     def body(g, r):
         return psum_compressed(g, r, "d")
 
-    out, new_r = jax.jit(jax.shard_map(
+    out, new_r = jax.jit(compat.shard_map(
         body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))(g, r)
     # quantization error bounded by scale/2 and captured in the residual
     scale = float(jnp.abs(g["w"]).max()) / 127.0
