@@ -1,6 +1,11 @@
-"""Shared benchmark utilities: timing + CSV rows."""
+"""Shared benchmark utilities: timing, CSV rows, graph-source coercion,
+and subprocess peak-RSS measurement for the streaming-vs-in-memory builds.
+"""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -27,3 +32,74 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
 
 def header():
     print("name,us_per_call,derived")
+
+
+def ensure_graph(source):
+    """Coerce a Graph / EdgeFile / PackedCSR / edge array to a Graph.
+
+    Benches take either an in-memory graph or a store handle; everything
+    funnels through ``repro.core.graph.as_graph`` so suites don't care
+    which one they were handed.
+    """
+    from repro.core.graph import as_graph
+
+    return as_graph(source)
+
+
+_RSS_PROLOGUE = """
+import os as _os, threading as _th, time as _time
+_page_kb = _os.sysconf("SC_PAGE_SIZE") // 1024
+_peak = [0]
+def _vm_rss_kb():
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * _page_kb
+    except OSError:
+        return 0
+def _sample():
+    while True:
+        _peak[0] = max(_peak[0], _vm_rss_kb())
+        _time.sleep(0.002)
+_th.Thread(target=_sample, daemon=True).start()
+"""
+
+_RSS_EPILOGUE = """
+def _peak_rss_kb():
+    peak = max(_peak[0], _vm_rss_kb())
+    # prefer the kernel watermark where /proc provides one (it catches
+    # transients the sampler can miss); ru_maxrss is NOT trustworthy here:
+    # it survives execve, so a child of a jax-loaded parent inherits the
+    # parent's watermark through it.
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    peak = max(peak, int(line.split()[1]))
+    except OSError:
+        pass
+    if peak == 0:
+        import resource
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return peak
+print(_peak_rss_kb())
+"""
+
+
+def child_peak_rss_kb(child_code: str, timeout: float = 600.0) -> int:
+    """Run ``child_code`` in a fresh interpreter, return its peak RSS (KiB).
+
+    Peak RSS is a process-lifetime maximum, so two pipelines can only be
+    compared from separate processes.  The child samples its own VmRSS on a
+    background thread (plus VmHWM where available) and prints the high-water
+    mark as the last stdout line.
+    """
+    code = _RSS_PROLOGUE + child_code + _RSS_EPILOGUE
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"rss child failed:\n{out.stderr}")
+    return int(out.stdout.strip().splitlines()[-1])

@@ -11,11 +11,18 @@ import traceback
 from benchmarks.common import header
 
 
+SMOKE_SUITES = ("theory", "memory", "spmd")    # tiny-scale CI drift gate
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale subset (CI gate: breaks on bench drift)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.smoke:
+        args.fast = True
 
     from benchmarks import (bench_apps, bench_elapsed, bench_kernels,
                             bench_lambda_sweep, bench_memory, bench_quality,
@@ -27,7 +34,8 @@ def main() -> None:
         "lambda_sweep": lambda: bench_lambda_sweep.main(
             scale=12 if args.fast else 13),
         "quality": lambda: bench_quality.main(fast=args.fast),
-        "memory": lambda: bench_memory.main(),
+        "memory": lambda: bench_memory.main(smoke=args.smoke,
+                                            fast=args.fast),
         "elapsed": lambda: bench_elapsed.main(fast=args.fast),
         "scaling": lambda: bench_scaling.main(fast=args.fast),
         "sequential": lambda: bench_sequential.main(fast=args.fast),
@@ -40,6 +48,8 @@ def main() -> None:
     failed = []
     for name, fn in suites.items():
         if args.only and name != args.only:
+            continue
+        if args.smoke and not args.only and name not in SMOKE_SUITES:
             continue
         try:
             fn()

@@ -1,7 +1,8 @@
 """Distributed NE — the paper's primary contribution, JAX-native."""
-from repro.core.graph import Graph, from_edges
-from repro.core.partitioner import NEConfig, PartitionResult, partition
+from repro.core.graph import Graph, as_graph, from_edges
+from repro.core.partitioner import (NEConfig, PartitionResult, alpha_limit,
+                                    partition)
 from repro.core.metrics import evaluate, theorem1_upper_bound
 
-__all__ = ["Graph", "from_edges", "NEConfig", "PartitionResult", "partition",
-           "evaluate", "theorem1_upper_bound"]
+__all__ = ["Graph", "as_graph", "from_edges", "NEConfig", "PartitionResult",
+           "alpha_limit", "partition", "evaluate", "theorem1_upper_bound"]

@@ -31,10 +31,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, exclusive_rank
+from repro.core.graph import Graph, as_graph, exclusive_rank
 
 Array = jax.Array
 I32_INF = np.iinfo(np.int32).max
+
+
+def alpha_limit(alpha: float, m: int, num_partitions: int) -> int:
+    """α-capacity limit ``⌊α·|E|/|P|⌋`` (paper Alg. 1).
+
+    The single shared definition for every enforcement site — the cleanup
+    pass and SPMD/single-controller parity depend on the expression staying
+    bit-identical between ``_partition_jit``, ``partition`` and
+    ``dist.partitioner_sm``.
+    """
+    return int(alpha * m / num_partitions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,7 +268,7 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
 @partial(jax.jit, static_argnames=("cfg",))
 def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
     n, m, p = g.num_vertices, g.num_edges, cfg.num_partitions
-    limit = int(cfg.alpha * m / p)
+    limit = alpha_limit(cfg.alpha, m, p)
     init = NEState(
         edge_part=jnp.full((m,), -1, jnp.int32),
         vparts=jnp.zeros((n, p), bool),
@@ -333,7 +344,13 @@ def cleanup_leftovers(edge_part: np.ndarray, vparts: np.ndarray,
 
 
 def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
-    """Run Distributed NE.  Returns host-side result with cleanup applied."""
+    """Run Distributed NE.  Returns host-side result with cleanup applied.
+
+    ``g`` may be a Graph or any store handle ``core.graph.as_graph``
+    accepts (EdgeFile, PackedCSR) — this path needs the full CSR, so store
+    inputs are materialized via the streaming builder first.
+    """
+    g = as_graph(g)
     cfg = cfg.clamped(g.num_vertices)
     state = jax.block_until_ready(_partition_jit(g, cfg))
     # np.array copies: asarray views of jax arrays are read-only, and the
@@ -341,7 +358,7 @@ def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
     edge_part = np.array(state.edge_part)
     vparts = np.array(state.vparts)
     counts = np.array(state.edges_per_part)
-    limit = int(cfg.alpha * g.num_edges / cfg.num_partitions)
+    limit = alpha_limit(cfg.alpha, g.num_edges, cfg.num_partitions)
     leftover = cleanup_leftovers(edge_part, vparts, counts,
                                  np.asarray(g.edges), cfg.num_partitions,
                                  limit)

@@ -41,9 +41,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.graph import Graph, exclusive_rank, shard_edges
 from repro.core.partitioner import (I32_INF, NEConfig, PartitionResult,
-                                    cleanup_leftovers, priority_enc,
-                                    vertex_claims)
+                                    alpha_limit, cleanup_leftovers,
+                                    priority_enc, vertex_claims)
 from repro.dist import compat
+from repro.io.edgefile import EdgeFile
+from repro.io.stream import require_canonical, shard_edges_stream
 
 AXIS = "shard"
 Array = jax.Array
@@ -198,26 +200,50 @@ def _partition_spmd_jit(cfg: NEConfig, limit: int, n: int, mesh,
     )(u_sh, v_sh, mask_sh, m_total)
 
 
+def _shard_input(source, num_devices: int):
+    """Edge shards + metadata from a Graph or a canonical EdgeFile.
+
+    The EdgeFile path never builds a CSR: the SPMD partitioner only needs
+    the raw edge shards, so a store handle goes disk → padded shards in two
+    block passes (``repro.io.stream.shard_edges_stream``) — this is the
+    §7-scale memory win of running straight from the store.
+    """
+    if isinstance(source, Graph):
+        edges = np.asarray(source.edges)
+        n, m = source.num_vertices, source.num_edges
+        shards, masks, _, dev = shard_edges(edges, num_devices)
+        return n, m, edges, shards, masks, dev
+    if not isinstance(source, EdgeFile):
+        raise TypeError(f"partition_spmd takes a Graph or an EdgeFile, "
+                        f"got {type(source).__name__}")
+    require_canonical(source)
+    n, m = int(source.num_vertices), int(source.num_edges)
+    shards, masks, _, dev, edges = shard_edges_stream(source, num_devices,
+                                                      with_edges=True)
+    return n, m, edges, shards, masks, dev
+
+
 def partition_spmd(g: Graph, cfg: NEConfig,
                    num_devices: int | None = None) -> PartitionResult:
     """Run Distributed NE as an SPMD program over 2D-hash edge shards.
 
+    ``g`` may be an in-memory Graph or a canonical ``repro.io.EdgeFile``
+    (partitioned straight from the store, no CSR materialization).
     Returns a host-side :class:`PartitionResult` matching the
     single-controller :func:`repro.core.partitioner.partition` API.
     """
-    cfg = cfg.clamped(g.num_vertices)
-    n, m, p_num = g.num_vertices, g.num_edges, cfg.num_partitions
     d = num_devices or len(jax.devices())
     d = max(1, min(d, len(jax.devices())))
+    n, m, edges, shards, masks, dev = _shard_input(g, d)
+    cfg = cfg.clamped(n)
+    p_num = cfg.num_partitions
     if m == 0:
         return PartitionResult(np.zeros((0,), np.int32),
                                np.zeros((n, p_num), bool),
                                np.zeros((p_num,), np.int32), 0, 0)
 
-    edges = np.asarray(g.edges)
-    shards, masks, _, dev = shard_edges(edges, d)
     mesh = compat.make_mesh((d,), (AXIS,))
-    limit = int(cfg.alpha * m / p_num)
+    limit = alpha_limit(cfg.alpha, m, p_num)
     ep_sh, vparts, counts, rounds = jax.block_until_ready(
         _partition_spmd_jit(cfg, limit, n, mesh,
                             jnp.asarray(shards[:, :, 0]),

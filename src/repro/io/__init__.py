@@ -1,0 +1,35 @@
+"""repro.io — streaming + out-of-core graph store.
+
+Chunked binary edge shards (``edgefile``), bounded-memory canonicalization
+and bit-identical streaming CSR builds (``stream``), a delta+varint packed
+CSR container with lazy per-shard decompression (``compress``), and
+disk-spilled RMAT generation (``spill``).  See docs/DESIGN-io.md.
+
+This package is importable without JAX (device staging is lazy), so the
+data path can be profiled on its own — ``benchmarks/bench_memory.py``
+relies on that.
+"""
+from repro.io.compress import (PackedCSR, PackedCSRWriter, pack_csr,
+                               varint_decode, varint_encode, zigzag_decode,
+                               zigzag_encode)
+from repro.io.csr import (CSRArrays, canonicalize_host, csr_from_canonical,
+                          grid_assign_host)
+from repro.io.edgefile import (FLAG_CANONICAL, EdgeFile, EdgeFileWriter,
+                               write_edgefile)
+from repro.io.spill import spill_canonical_rmat, spill_rmat
+from repro.io.stream import (canonicalize_stream, csr_arrays_from_edgefile,
+                             csr_slot_stream, degree_indptr,
+                             graph_from_edgefile, infer_num_vertices,
+                             require_canonical, shard_edges_stream)
+
+__all__ = [
+    "CSRArrays", "EdgeFile", "EdgeFileWriter", "FLAG_CANONICAL",
+    "PackedCSR", "PackedCSRWriter", "canonicalize_host",
+    "canonicalize_stream", "csr_arrays_from_edgefile", "csr_from_canonical",
+    "csr_slot_stream", "degree_indptr", "graph_from_edgefile",
+    "grid_assign_host", "infer_num_vertices", "pack_csr",
+    "require_canonical", "shard_edges_stream", "spill_canonical_rmat",
+    "spill_rmat",
+    "varint_decode", "varint_encode", "write_edgefile", "zigzag_decode",
+    "zigzag_encode",
+]

@@ -1,0 +1,441 @@
+"""repro.io — streaming + out-of-core graph store.
+
+Round-trip property tests (write→read→Graph equals from_edges on random +
+RMAT inputs, empty/single-edge/duplicate-heavy cases), varint codec fuzz,
+out-of-core dedup with chunk size smaller than the input, packed-CSR
+round trips, and the store front doors of both partitioners.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import repro.io as rio
+from repro.core import NEConfig, as_graph, from_edges, partition
+from repro.core.graph import canonicalize_edges, grid_assign, shard_edges
+from repro.graphs.rmat import rmat_edge_chunks, rmat_edges
+
+SEED = 0
+
+
+def random_edges(rng, n, m, dup_heavy=False, loops=True):
+    hi = max(n, 1)
+    if dup_heavy:                       # tiny id range → mostly duplicates
+        hi = max(int(np.sqrt(n)), 2)
+    e = rng.integers(0, hi, size=(m, 2))
+    if loops and m:
+        k = max(m // 10, 1)
+        idx = rng.integers(0, m, size=k)
+        e[idx, 1] = e[idx, 0]
+    return e
+
+
+def graphs_equal(a, b):
+    for f in ("edges", "indptr", "adj_dst", "adj_eid", "slot_src", "degree"):
+        fa, fb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        np.testing.assert_array_equal(fa, fb, err_msg=f)
+        assert fa.dtype == fb.dtype, (f, fa.dtype, fb.dtype)
+
+
+# ---------------------------------------------------------------------------
+# edgefile
+# ---------------------------------------------------------------------------
+
+def test_edgefile_roundtrip_and_seek(tmp_path):
+    rng = np.random.default_rng(SEED)
+    e = random_edges(rng, 500, 3210)
+    ef = rio.write_edgefile(tmp_path / "e.edges", e, num_vertices=500,
+                            block_size=1000)
+    assert ef.num_edges == 3210 and ef.num_vertices == 500
+    assert ef.num_blocks == 4
+    np.testing.assert_array_equal(ef.read_all(), e)
+    # O(1) block seeks, any order
+    np.testing.assert_array_equal(ef.block(3), e[3000:])
+    np.testing.assert_array_equal(ef.block(1), e[1000:2000])
+    # per-block min/max metadata
+    for i in range(4):
+        blk = e[i * 1000:(i + 1) * 1000]
+        assert ef.block_vmin[i] == blk.min()
+        assert ef.block_vmax[i] == blk.max()
+        assert ef.block_counts[i] == blk.shape[0]
+
+
+def test_edgefile_chunked_append_matches_single(tmp_path):
+    rng = np.random.default_rng(SEED + 1)
+    e = random_edges(rng, 100, 777)
+    with rio.EdgeFileWriter(tmp_path / "a.edges", block_size=64) as w:
+        off = 0
+        for k in (0, 1, 63, 64, 65, 200, 777 - 393):   # odd chunk cuts
+            w.append(e[off:off + k])
+            off += k
+        assert off == 777
+    a = rio.EdgeFile(tmp_path / "a.edges")
+    np.testing.assert_array_equal(a.read_all(), e)
+
+
+def test_edgefile_empty(tmp_path):
+    ef = rio.write_edgefile(tmp_path / "z.edges", np.zeros((0, 2), np.int64))
+    assert ef.num_edges == 0 and ef.num_blocks == 0
+    assert ef.read_all().shape == (0, 2)
+
+
+def test_edgefile_infers_num_vertices(tmp_path):
+    e = np.array([[0, 7], [3, 2]])
+    ef = rio.write_edgefile(tmp_path / "n.edges", e)
+    assert ef.num_vertices == 8
+
+
+def test_edgefile_rejects_ids_wider_than_dtype(tmp_path):
+    # int64 ids that don't fit int32 must fail loudly at append time, not
+    # wrap silently through the cast
+    with pytest.raises(ValueError, match="int32"):
+        rio.write_edgefile(tmp_path / "w.edges",
+                           np.array([[0, 2 ** 31]], np.int64))
+    ok = rio.write_edgefile(tmp_path / "ok.edges",
+                            np.array([[0, 2 ** 31 - 1]], np.int64))
+    assert ok.read_all()[0, 1] == 2 ** 31 - 1
+    # same-width unsigned wraps too — must be caught, not cast
+    with pytest.raises(ValueError, match="do not fit"):
+        rio.write_edgefile(tmp_path / "u.edges",
+                           np.array([[1, 3_000_000_000]], np.uint32))
+
+
+def test_edgefile_rejects_lying_num_vertices(tmp_path):
+    # a too-small declared vertex space would corrupt key-encoded
+    # consumers (canonicalize_stream's u*n+v) — reject at write time
+    with pytest.raises(ValueError, match="num_vertices"):
+        rio.write_edgefile(tmp_path / "lie.edges", np.array([[0, 99]]),
+                           num_vertices=3)
+
+
+def test_graph_from_edgefile_rejects_conflicting_n(tmp_path):
+    e = np.array([[0, 1], [1, 2]])
+    can, n = canonicalize_edges(e, 3)
+    ef = rio.write_edgefile(tmp_path / "c.edges", can, num_vertices=3,
+                            flags=rio.FLAG_CANONICAL)
+    with pytest.raises(ValueError, match="conflicts"):
+        rio.graph_from_edgefile(ef, num_vertices=10)
+
+
+def test_edgefile_inference_excludes_loop_only_vertices(tmp_path):
+    # same rule as canonicalize_edges: a vertex that only appears in
+    # self-loops does not extend the vertex space — keeps raw-file
+    # stream builds bit-identical to from_edges
+    e = np.array([[0, 1], [5, 5]])
+    ef = rio.write_edgefile(tmp_path / "l.edges", e)
+    assert ef.num_vertices == 2
+    graphs_equal(rio.graph_from_edgefile(ef, tmpdir=str(tmp_path)),
+                 from_edges(e))
+
+
+# ---------------------------------------------------------------------------
+# varint / zigzag / delta codec
+# ---------------------------------------------------------------------------
+
+def test_varint_fuzz():
+    rng = np.random.default_rng(SEED)
+    for _ in range(20):
+        kind = rng.integers(0, 3)
+        size = int(rng.integers(0, 3000))
+        if kind == 0:
+            x = rng.integers(0, 128, size)                  # 1-byte dense
+        elif kind == 1:
+            x = rng.integers(-2 ** 62, 2 ** 62, size)       # wide
+        else:
+            x = rng.integers(-5, 5, size)                   # small signed
+        buf = rio.varint_encode(rio.zigzag_encode(x))
+        y = rio.zigzag_decode(rio.varint_decode(buf, x.size))
+        np.testing.assert_array_equal(x, y)
+
+
+def test_varint_extremes():
+    x = np.array([0, 1, -1, 127, 128, -128,
+                  np.iinfo(np.int64).max, np.iinfo(np.int64).min])
+    buf = rio.varint_encode(rio.zigzag_encode(x))
+    np.testing.assert_array_equal(
+        rio.zigzag_decode(rio.varint_decode(buf, x.size)), x)
+
+
+def test_varint_rejects_corrupt():
+    with pytest.raises(ValueError):
+        rio.varint_decode(np.array([0x80, 0x80], np.uint8), 1)   # no end
+    with pytest.raises(ValueError):
+        rio.varint_decode(np.array([1, 2], np.uint8), 1)         # extra value
+
+
+def test_delta_rows_roundtrip():
+    from repro.io.compress import delta_decode_rows, delta_encode_rows
+
+    rng = np.random.default_rng(SEED)
+    vals = rng.integers(0, 1000, 257)
+    bounds = np.unique(rng.integers(0, 257, 40))
+    bounds = np.concatenate([[0], bounds, [257]]).astype(np.int64)
+    d = delta_encode_rows(vals, bounds)
+    np.testing.assert_array_equal(delta_decode_rows(d, bounds), vals)
+
+
+# ---------------------------------------------------------------------------
+# out-of-core canonicalization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["random", "dup_heavy", "single", "empty"])
+def test_canonicalize_stream_matches_host(tmp_path, case):
+    rng = np.random.default_rng(SEED + 2)
+    n = 300
+    if case == "random":
+        e = random_edges(rng, n, 5000)
+    elif case == "dup_heavy":
+        e = random_edges(rng, n, 5000, dup_heavy=True)
+    elif case == "single":
+        e = np.array([[5, 3]])
+    else:
+        e = np.zeros((0, 2), np.int64)
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e, num_vertices=n,
+                             block_size=128)
+    # chunk size far smaller than the input → true external-sort dedup
+    can = rio.canonicalize_stream(raw, tmp_path / "can.edges",
+                                  num_vertices=n, chunk_size=64)
+    ref, _ = canonicalize_edges(e, n)
+    np.testing.assert_array_equal(can.read_all(), ref)
+    assert can.canonical and can.num_edges == ref.shape[0]
+
+
+def test_canonicalize_stream_dedups_across_chunks(tmp_path):
+    # the same edge in every chunk must survive exactly once
+    e = np.tile(np.array([[1, 2], [4, 3], [2, 1]]), (50, 1))
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e, num_vertices=5,
+                             block_size=4)
+    can = rio.canonicalize_stream(raw, tmp_path / "can.edges",
+                                  num_vertices=5, chunk_size=4)
+    np.testing.assert_array_equal(can.read_all(), [[1, 2], [3, 4]])
+
+
+# ---------------------------------------------------------------------------
+# streaming Graph build — bit-identical to from_edges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["random", "dup_heavy", "empty", "single"])
+def test_stream_graph_bit_identical_random(tmp_path, case):
+    rng = np.random.default_rng(SEED + 3)
+    n = 200
+    if case == "random":
+        e = random_edges(rng, n, 4000)
+    elif case == "dup_heavy":
+        e = random_edges(rng, n, 4000, dup_heavy=True)
+    elif case == "single":
+        e = np.array([[7, 2]])
+    else:
+        e = np.zeros((0, 2), np.int64)
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e, num_vertices=n,
+                             block_size=256)
+    g_stream = rio.graph_from_edgefile(raw, chunk_size=128,
+                                       tmpdir=str(tmp_path))
+    g_ref = from_edges(e, num_vertices=n)
+    graphs_equal(g_stream, g_ref)
+
+
+def test_stream_graph_bit_identical_rmat14(tmp_path):
+    """Acceptance: stream-built Graph == from_edges on RMAT scale 14."""
+    e = rmat_edges(14, 16, seed=SEED)
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e,
+                             num_vertices=1 << 14)
+    g_stream = rio.graph_from_edgefile(raw, tmpdir=str(tmp_path))
+    g_ref = from_edges(e, num_vertices=1 << 14)
+    graphs_equal(g_stream, g_ref)
+
+
+def test_stream_graph_from_chunk_iterator(tmp_path):
+    # one-shot generators are a first-class source when n is given…
+    g_stream = rio.graph_from_edgefile(
+        rmat_edge_chunks(8, 4, seed=2, chunk_size=100),
+        num_vertices=1 << 8, tmpdir=str(tmp_path))
+    e = np.concatenate(list(rmat_edge_chunks(8, 4, seed=2, chunk_size=100)))
+    graphs_equal(g_stream, from_edges(e, num_vertices=1 << 8))
+    # …and rejected without it (inference would exhaust the iterator)
+    with pytest.raises(ValueError, match="num_vertices"):
+        rio.graph_from_edgefile(rmat_edge_chunks(8, 4, seed=2))
+
+
+def test_as_graph_dispatch(tmp_path):
+    e = rmat_edges(8, 8, seed=1)
+    g_ref = from_edges(e, num_vertices=1 << 8)
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e, num_vertices=1 << 8)
+    graphs_equal(as_graph(raw), g_ref)
+    graphs_equal(as_graph(g_ref), g_ref)
+    graphs_equal(as_graph(e, num_vertices=1 << 8), g_ref)
+    packed = rio.pack_csr(g_ref, tmp_path / "g.rcsr")
+    graphs_equal(as_graph(packed), g_ref)
+    with pytest.raises(TypeError):
+        as_graph("not a graph")
+
+
+# ---------------------------------------------------------------------------
+# packed CSR container
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows_per_shard", [7, 64, 10_000])
+def test_packed_csr_roundtrip(tmp_path, rows_per_shard):
+    g = from_edges(rmat_edges(9, 8, seed=2), num_vertices=1 << 9)
+    packed = rio.pack_csr(g, tmp_path / "g.rcsr",
+                          rows_per_shard=rows_per_shard)
+    graphs_equal(packed.to_graph(), g)
+
+
+def test_packed_csr_from_edgefile_stream(tmp_path):
+    e = rmat_edges(10, 8, seed=3)
+    raw = rio.write_edgefile(tmp_path / "raw.edges", e, num_vertices=1 << 10)
+    can = rio.canonicalize_stream(raw, tmp_path / "can.edges",
+                                  chunk_size=1000)
+    packed = rio.pack_csr(can, tmp_path / "g.rcsr", rows_per_shard=100,
+                          chunk_size=500)
+    graphs_equal(packed.to_graph(), from_edges(e, num_vertices=1 << 10))
+
+
+def test_packed_csr_lazy_row(tmp_path):
+    g = from_edges(rmat_edges(9, 8, seed=4), num_vertices=1 << 9)
+    packed = rio.pack_csr(g, tmp_path / "g.rcsr", rows_per_shard=32)
+    indptr = np.asarray(g.indptr)
+    dst_ref = np.asarray(g.adj_dst)
+    for v in (0, 31, 32, 100, (1 << 9) - 1):
+        dst, _ = packed.row(v)
+        np.testing.assert_array_equal(dst, dst_ref[indptr[v]:indptr[v + 1]])
+
+
+def test_packed_csr_compresses(tmp_path):
+    g = from_edges(rmat_edges(12, 16, seed=5), num_vertices=1 << 12)
+    packed = rio.pack_csr(g, tmp_path / "g.rcsr")
+    raw_bytes = 2 * g.num_slots * 4                 # adj_dst + adj_eid int32
+    disk = os.path.getsize(tmp_path / "g.rcsr")
+    assert disk < 0.75 * raw_bytes, (disk, raw_bytes)
+
+
+def test_packed_csr_empty(tmp_path):
+    g = from_edges(np.zeros((0, 2), np.int64), num_vertices=10)
+    packed = rio.pack_csr(g, tmp_path / "g.rcsr", rows_per_shard=4)
+    graphs_equal(packed.to_graph(), g)
+
+
+def test_packed_csr_writer_context_manager_finalizes(tmp_path):
+    # the with-block alone must produce a readable file (same contract as
+    # EdgeFileWriter): the shard table is backfilled on clean exit
+    g = from_edges(rmat_edges(8, 8, seed=6), num_vertices=1 << 8)
+    with rio.PackedCSRWriter(tmp_path / "g.rcsr", np.asarray(g.indptr),
+                             g.num_edges) as w:
+        w.append_slots(np.asarray(g.adj_dst), np.asarray(g.adj_eid))
+    graphs_equal(rio.PackedCSR(tmp_path / "g.rcsr").to_graph(), g)
+
+
+def test_packed_csr_rejects_non_canonical_graph(tmp_path):
+    # to_graph reconstructs edges from u<v forward slots; a dedup=False
+    # graph with loops/reversed rows must be rejected, not corrupted
+    g = from_edges(np.array([[3, 1], [2, 2], [0, 4]]), num_vertices=5,
+                   dedup=False)
+    with pytest.raises(ValueError, match="canonical"):
+        rio.pack_csr(g, tmp_path / "g.rcsr")
+
+
+# ---------------------------------------------------------------------------
+# spillable RMAT
+# ---------------------------------------------------------------------------
+
+def test_spill_rmat_matches_chunked_generator(tmp_path):
+    ef = rio.spill_rmat(tmp_path / "r.edges", 10, 8, seed=7,
+                        chunk_size=1000)
+    ref = np.concatenate(list(rmat_edge_chunks(10, 8, seed=7,
+                                               chunk_size=1000)))
+    assert ef.num_edges == (1 << 10) * 8
+    np.testing.assert_array_equal(ef.read_all(), ref)
+
+
+def test_spill_rmat_deterministic(tmp_path):
+    a = rio.spill_rmat(tmp_path / "a.edges", 9, 8, seed=11, chunk_size=500)
+    b = rio.spill_rmat(tmp_path / "b.edges", 9, 8, seed=11, chunk_size=500)
+    np.testing.assert_array_equal(a.read_all(), b.read_all())
+
+
+def test_rmat_edges_int32_when_small():
+    assert rmat_edges(8, 4, seed=0).dtype == np.int32
+
+
+def test_spill_canonical_rmat_partitions(tmp_path):
+    can = rio.spill_canonical_rmat(tmp_path / "store", 9, 8, seed=1,
+                                   chunk_size=700)
+    assert can.canonical
+    res = partition(can, NEConfig(num_partitions=4, seed=0))
+    assert (res.edge_part >= 0).all()
+    assert res.edge_part.shape == (can.num_edges,)
+
+
+# ---------------------------------------------------------------------------
+# host hash + streaming shards + SPMD front door
+# ---------------------------------------------------------------------------
+
+def test_grid_assign_host_matches_device():
+    e = rmat_edges(10, 8, seed=3)
+    for d in (1, 4, 8, 12):
+        host = rio.grid_assign_host(e, d, salt=1)
+        dev = np.asarray(grid_assign(np.asarray(e, np.int32), d, salt=1))
+        np.testing.assert_array_equal(host, dev)
+
+
+def test_shard_edges_stream_matches_inmemory(tmp_path):
+    e = rmat_edges(10, 8, seed=3)
+    can, n = canonicalize_edges(e, 1 << 10)
+    ef = rio.write_edgefile(tmp_path / "c.edges", can, num_vertices=n,
+                            block_size=512, flags=rio.FLAG_CANONICAL)
+    s_ref, m_ref, cap_ref, dev_ref = shard_edges(can, 8)
+    s, m, cap, dev = rio.shard_edges_stream(ef, 8)
+    assert cap == cap_ref
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(m, m_ref)
+    np.testing.assert_array_equal(dev, dev_ref)
+
+
+def test_partition_spmd_from_edgefile(tmp_path):
+    from repro.dist.partitioner_sm import partition_spmd
+
+    e = rmat_edges(9, 8, seed=5)
+    can, n = canonicalize_edges(e, 1 << 9)
+    ef = rio.write_edgefile(tmp_path / "c.edges", can, num_vertices=n,
+                            block_size=300, flags=rio.FLAG_CANONICAL)
+    cfg = NEConfig(num_partitions=4, seed=0)
+    res_file = partition_spmd(ef, cfg)
+    res_mem = partition_spmd(from_edges(e, num_vertices=n), cfg)
+    np.testing.assert_array_equal(res_file.edge_part, res_mem.edge_part)
+    np.testing.assert_array_equal(res_file.edges_per_part,
+                                  res_mem.edges_per_part)
+
+
+def test_partition_spmd_rejects_raw_edgefile(tmp_path):
+    from repro.dist.partitioner_sm import partition_spmd
+
+    raw = rio.write_edgefile(tmp_path / "raw.edges", rmat_edges(8, 4),
+                             num_vertices=1 << 8)
+    with pytest.raises(ValueError, match="not canonical"):
+        partition_spmd(raw, NEConfig(num_partitions=4))
+
+
+def test_io_importable_without_jax(tmp_path):
+    """The store must stay importable (and usable) with no jax in sight —
+    bench_memory measures the pure data path in a fresh interpreter."""
+    import subprocess
+    import sys
+
+    code = (
+        "import sys\n"
+        "import repro.io as rio\n"
+        "from repro.graphs.rmat import rmat_edges\n"
+        "assert 'jax' not in sys.modules, 'repro.io pulled in jax'\n"
+        f"ef = rio.spill_rmat({str(tmp_path / 'r.edges')!r}, 8, 4, seed=0)\n"
+        f"can = rio.canonicalize_stream(ef, "
+        f"{str(tmp_path / 'c.edges')!r})\n"
+        f"rio.pack_csr(can, {str(tmp_path / 'g.rcsr')!r})\n"
+        "assert 'jax' not in sys.modules, 'data path pulled in jax'\n"
+    )
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
