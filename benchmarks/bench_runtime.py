@@ -1,0 +1,98 @@
+"""Runtime driver: per-round snapshot overhead + resume/artifact latency.
+
+Quantifies what the checkpointable state machine costs over the
+fire-and-forget jit — the number that decides how often a production run
+can afford to snapshot.  Rows:
+
+  runtime/round_plain        per-round step time, no snapshots
+  runtime/round_snap         per-round step time, snapshot every round
+  runtime/snapshot_overhead  the delta — pure snapshot cost per round
+  runtime/resume_restore     latency from PartitionDriver.resume() call to
+                             a stepped-and-ready driver (ingest + restore)
+  runtime/artifact_save      durable artifact write
+  runtime/artifact_load      artifact load back to edge_part + replica map
+
+In ``--smoke`` mode this suite is also the CI resume drift gate: it
+asserts the resumed run reproduces the uninterrupted assignment bit for
+bit and that the artifact round-trips, so any regression in the
+runtime layer breaks the gate loudly.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import record
+
+from repro.core import NEConfig
+from repro.graphs.rmat import rmat
+from repro.runtime import PartitionDriver, load_artifact
+
+
+def main(fast: bool = False, smoke: bool = False):
+    scale = 10 if fast else 12
+    g = rmat(scale, 8, seed=3)
+    cfg = NEConfig(num_partitions=8, seed=0, k_sel=128, edge_chunk=1 << 14)
+
+    with tempfile.TemporaryDirectory() as td:
+        # uninterrupted, no snapshots (warm compile happens on round 1;
+        # steady-state rounds are what a long run pays per round)
+        drv = PartitionDriver(g, cfg)
+        drv.step()                              # compile
+        t0 = time.time()
+        res = drv.run()
+        rounds = max(res.rounds - 1, 1)
+        t_plain = (time.time() - t0) / rounds
+        record("runtime/round_plain", t_plain * 1e6,
+               f"rounds={res.rounds}")
+
+        snap_dir = Path(td) / "snap"
+        drv_s = PartitionDriver(g, cfg, snapshot_dir=snap_dir,
+                                snapshot_every=1, keep=100_000)
+        drv_s.step()
+        t0 = time.time()
+        res_s = drv_s.run()
+        t_snap = (time.time() - t0) / max(res_s.rounds - 1, 1)
+        record("runtime/round_snap", t_snap * 1e6,
+               f"snapshots={len(drv_s.snapshot.rounds())}")
+        record("runtime/snapshot_overhead", (t_snap - t_plain) * 1e6,
+               f"+{(t_snap - t_plain) / max(t_plain, 1e-12) * 100:.0f}%")
+
+        # resume latency: rebuild shards + restore state at round k
+        k = max(res_s.rounds // 2, 1)
+        t0 = time.time()
+        drv_r = PartitionDriver.resume(g, cfg, snap_dir, round_k=k)
+        t_resume = time.time() - t0
+        record("runtime/resume_restore", t_resume * 1e6, f"round={k}")
+        res_r = drv_r.run()
+
+        art_dir = Path(td) / "art"
+        t0 = time.time()
+        drv_s.save_artifact(art_dir)
+        record("runtime/artifact_save", (time.time() - t0) * 1e6,
+               f"m={g.num_edges}")
+        t0 = time.time()
+        loaded = load_artifact(art_dir)
+        ep = loaded.edge_part
+        vp = loaded.vparts
+        record("runtime/artifact_load", (time.time() - t0) * 1e6,
+               f"bytes={sum(p.stat().st_size for p in art_dir.iterdir())}")
+
+        # CI resume drift gate — a silent bit-identity regression in the
+        # runtime layer must fail the smoke suite, not just a slow test
+        ok_resume = bool((res_r.edge_part == res.edge_part).all()
+                         and (res_r.vparts == res.vparts).all())
+        ok_artifact = bool((ep == res_s.edge_part).all()
+                           and (vp == res_s.vparts).all())
+        record("runtime/resume_identical", float(ok_resume),
+               f"round={k} vs full")
+        record("runtime/artifact_identical", float(ok_artifact), "")
+        assert ok_resume, "resumed run diverged from uninterrupted run"
+        assert ok_artifact, "artifact did not round-trip the assignment"
+        if not smoke:
+            assert (res_s.edge_part == res.edge_part).all()
+
+
+if __name__ == "__main__":
+    main()

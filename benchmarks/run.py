@@ -11,7 +11,7 @@ import traceback
 from benchmarks.common import header
 
 
-SMOKE_SUITES = ("theory", "memory", "spmd")    # tiny-scale CI drift gate
+SMOKE_SUITES = ("theory", "memory", "spmd", "runtime")  # tiny CI drift gate
 
 
 def main() -> None:
@@ -26,8 +26,8 @@ def main() -> None:
 
     from benchmarks import (bench_apps, bench_elapsed, bench_kernels,
                             bench_lambda_sweep, bench_memory, bench_quality,
-                            bench_roads, bench_scaling, bench_sequential,
-                            bench_spmd, bench_theory)
+                            bench_roads, bench_runtime, bench_scaling,
+                            bench_sequential, bench_spmd, bench_theory)
 
     suites = {
         "theory": lambda: bench_theory.main(),
@@ -40,6 +40,8 @@ def main() -> None:
         "scaling": lambda: bench_scaling.main(fast=args.fast),
         "sequential": lambda: bench_sequential.main(fast=args.fast),
         "spmd": lambda: bench_spmd.main(fast=args.fast),
+        "runtime": lambda: bench_runtime.main(fast=args.fast,
+                                              smoke=args.smoke),
         "apps": lambda: bench_apps.main(fast=args.fast),
         "roads": lambda: bench_roads.main(fast=args.fast),
         "kernels": lambda: bench_kernels.main(fast=args.fast),

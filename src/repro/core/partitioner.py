@@ -265,11 +265,9 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
                    state.rounds + 1, new_total.astype(jnp.int32))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
+def _init_state(g: Graph, cfg: NEConfig) -> NEState:
     n, m, p = g.num_vertices, g.num_edges, cfg.num_partitions
-    limit = alpha_limit(cfg.alpha, m, p)
-    init = NEState(
+    return NEState(
         edge_part=jnp.full((m,), -1, jnp.int32),
         vparts=jnp.zeros((n, p), bool),
         degree_rest=g.degree.astype(jnp.int32),
@@ -278,6 +276,26 @@ def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
         rounds=jnp.zeros((), jnp.int32),
         new_last_round=jnp.ones((), jnp.int32),
     )
+
+
+# Round-stepping surface for the checkpointable runtime
+# (``repro.runtime.driver``): one jit call == one paper round, on exactly
+# the traced round function the whole-run while_loop uses — which is what
+# makes pause/snapshot/resume bit-identical to an uninterrupted run.
+ne_init_state = jax.jit(_init_state, static_argnames=("cfg",))
+ne_round_step = jax.jit(_round, static_argnames=("cfg", "limit"))
+
+
+def ne_done(state: NEState, cfg: NEConfig) -> bool:
+    """Host-side mirror of the whole-run while_loop condition."""
+    return bool((np.asarray(state.edge_part) >= 0).all()
+                or int(state.rounds) >= cfg.max_rounds)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
+    limit = alpha_limit(cfg.alpha, g.num_edges, cfg.num_partitions)
+    init = _init_state(g, cfg)
 
     def cond(s: NEState):
         return ((s.edge_part < 0).any()
@@ -343,6 +361,20 @@ def cleanup_leftovers(edge_part: np.ndarray, vparts: np.ndarray,
     return int(rem.size)
 
 
+def finalize_result(edge_part, vparts, counts, edges: np.ndarray,
+                    cfg: NEConfig, rounds: int) -> PartitionResult:
+    """Host-side epilogue shared by every partitioner entry point: copy the
+    device state (asarray views of jax arrays are read-only, the cleanup
+    pass mutates in place), water-fill the max_rounds leftovers, wrap."""
+    edge_part = np.array(edge_part)
+    vparts = np.array(vparts)
+    counts = np.array(counts)
+    limit = alpha_limit(cfg.alpha, edges.shape[0], cfg.num_partitions)
+    leftover = cleanup_leftovers(edge_part, vparts, counts, edges,
+                                 cfg.num_partitions, limit)
+    return PartitionResult(edge_part, vparts, counts, int(rounds), leftover)
+
+
 def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
     """Run Distributed NE.  Returns host-side result with cleanup applied.
 
@@ -353,14 +385,6 @@ def partition(g: Graph, cfg: NEConfig) -> PartitionResult:
     g = as_graph(g)
     cfg = cfg.clamped(g.num_vertices)
     state = jax.block_until_ready(_partition_jit(g, cfg))
-    # np.array copies: asarray views of jax arrays are read-only, and the
-    # cleanup pass mutates these in place
-    edge_part = np.array(state.edge_part)
-    vparts = np.array(state.vparts)
-    counts = np.array(state.edges_per_part)
-    limit = alpha_limit(cfg.alpha, g.num_edges, cfg.num_partitions)
-    leftover = cleanup_leftovers(edge_part, vparts, counts,
-                                 np.asarray(g.edges), cfg.num_partitions,
-                                 limit)
-    return PartitionResult(edge_part, vparts, counts, int(state.rounds),
-                           leftover)
+    return finalize_result(state.edge_part, state.vparts,
+                           state.edges_per_part, np.asarray(g.edges), cfg,
+                           int(state.rounds))

@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.graph import Graph, exclusive_rank, shard_edges
 from repro.core.partitioner import (I32_INF, NEConfig, PartitionResult,
-                                    alpha_limit, cleanup_leftovers,
+                                    alpha_limit, finalize_result,
                                     priority_enc, vertex_claims)
 from repro.dist import compat
 from repro.io.edgefile import EdgeFile
@@ -160,6 +160,79 @@ def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
                      state.rounds + 1, state.remaining - new_total)
 
 
+# ---------------------------------------------------------------------------
+# round-stepping surface (repro.runtime.driver)
+# ---------------------------------------------------------------------------
+
+def spmd_init_state(shards: np.ndarray, masks: np.ndarray, n: int,
+                    cfg: NEConfig) -> SpmdState:
+    """Host-built initial round state, bit-identical to the in-jit init of
+    :func:`_partition_spmd_jit` (global D_rest via one bincount pass instead
+    of the in-shard_map psum).  ``edge_part`` keeps its (D, C) shard layout
+    so the stepping jit can shard it over the device axis.
+    """
+    p_num = cfg.num_partitions
+    flat = shards.reshape(-1, 2)[masks.reshape(-1)]
+    degree = np.zeros(n, np.int64)
+    np.add.at(degree, flat[:, 0], 1)
+    np.add.at(degree, flat[:, 1], 1)
+    return SpmdState(
+        edge_part=jnp.full(masks.shape, -1, jnp.int32),
+        vparts=jnp.zeros((n, p_num), bool),
+        degree_rest=jnp.asarray(degree.astype(np.int32)),
+        edges_per_part=jnp.zeros((p_num,), jnp.int32),
+        key=jax.random.PRNGKey(cfg.seed),
+        rounds=jnp.zeros((), jnp.int32),
+        remaining=jnp.int32(flat.shape[0]),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "limit", "n", "mesh"))
+def spmd_round_step(cfg: NEConfig, limit: int, n: int, mesh,
+                    u_sh: Array, v_sh: Array, mask_sh: Array,
+                    state: SpmdState) -> SpmdState:
+    """One paper round as its own shard_map program.
+
+    Exactly the traced round function the whole-run while_loop uses
+    (:func:`_spmd_round`), so driving rounds one jit call at a time — and
+    pausing/snapshotting/resuming between them — is bit-identical to the
+    fire-and-forget :func:`partition_spmd` (asserted by
+    tests/test_runtime.py).  ``state.edge_part`` is (D, C) and sharded over
+    the device axis; everything else is replicated.
+    """
+    def body(u_l, v_l, mask_l, ep_l, vp, dr, epp, key, rounds, remaining):
+        st = SpmdState(ep_l[0], vp, dr, epp, key, rounds, remaining)
+        out = _spmd_round(cfg, limit, n, u_l[0], v_l[0], mask_l[0], st)
+        return out._replace(edge_part=out.edge_part[None])
+
+    rep = (P(),) * 6
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P(AXIS, None),
+                  P(AXIS, None)) + rep,
+        out_specs=SpmdState(P(AXIS, None), *rep),
+        check_vma=False,
+    )(u_sh, v_sh, mask_sh, *state)
+
+
+def spmd_done(state: SpmdState, cfg: NEConfig) -> bool:
+    """Host-side mirror of the whole-run while_loop condition."""
+    return bool(int(state.remaining) <= 0
+                or int(state.rounds) >= cfg.max_rounds)
+
+
+def stitch_edge_part(ep_sh: np.ndarray, dev: np.ndarray, m: int,
+                     ) -> np.ndarray:
+    """Shard-order assignments back to global edge order: shard d holds
+    ``edges[dev == d]`` in their original relative order."""
+    edge_part = np.full((m,), -1, np.int32)
+    ep_sh = np.asarray(ep_sh)
+    for dd in range(ep_sh.shape[0]):
+        idx = np.nonzero(dev == dd)[0]
+        edge_part[idx] = ep_sh[dd, : idx.size]
+    return edge_part
+
+
 @partial(jax.jit, static_argnames=("cfg", "limit", "n", "mesh"))
 def _partition_spmd_jit(cfg: NEConfig, limit: int, n: int, mesh,
                         u_sh: Array, v_sh: Array, mask_sh: Array,
@@ -250,18 +323,6 @@ def partition_spmd(g: Graph, cfg: NEConfig,
                             jnp.asarray(shards[:, :, 1]),
                             jnp.asarray(masks), jnp.int32(m)))
 
-    # stitch shard-order assignments back to global edge order: shard d
-    # holds edges[dev == d] in their original relative order.
-    edge_part = np.full((m,), -1, np.int32)
-    ep_sh = np.asarray(ep_sh)
-    for dd in range(d):
-        idx = np.nonzero(dev == dd)[0]
-        edge_part[idx] = ep_sh[dd, : idx.size]
-
-    # np.array copies: asarray views of jax arrays are read-only, and the
-    # cleanup pass mutates these in place
-    vparts = np.array(vparts)
-    counts = np.array(counts)
-    leftover = cleanup_leftovers(edge_part, vparts, counts, edges, p_num,
-                                 limit)
-    return PartitionResult(edge_part, vparts, counts, int(rounds), leftover)
+    edge_part = stitch_edge_part(ep_sh, dev, m)
+    return finalize_result(edge_part, vparts, counts, edges, cfg,
+                           int(rounds))

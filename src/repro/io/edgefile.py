@@ -203,9 +203,28 @@ class EdgeFile:
         raw = self._f.read(count * 2 * self.dtype.itemsize)
         return np.frombuffer(raw, dtype=self.dtype).reshape(count, 2)
 
-    def iter_blocks(self, start: int = 0):
-        for i in range(start, self.num_blocks):
+    def iter_blocks(self, start: int = 0, stop: int | None = None):
+        """Yield blocks ``[start, stop)`` — the shard-range read every
+        multi-host ingestion plan is built on (``runtime.cluster`` hands
+        each host a contiguous block range, so no host touches the rest
+        of the file)."""
+        stop = self.num_blocks if stop is None else min(stop, self.num_blocks)
+        for i in range(start, stop):
             yield self.block(i)
+
+    def edges_in_blocks(self, start: int = 0, stop: int | None = None) -> int:
+        """Edge count of block range ``[start, stop)`` from the index —
+        no data read."""
+        stop = self.num_blocks if stop is None else min(stop, self.num_blocks)
+        return int(self.block_counts[start:stop].sum()) if stop > start else 0
+
+    def read_blocks(self, start: int = 0, stop: int | None = None,
+                    ) -> np.ndarray:
+        """Materialize block range ``[start, stop)`` as one (k, 2) array."""
+        blocks = list(self.iter_blocks(start, stop))
+        if not blocks:
+            return np.zeros((0, 2), self.dtype)
+        return np.concatenate(blocks)
 
     def read_all(self) -> np.ndarray:
         if self.num_blocks == 0:

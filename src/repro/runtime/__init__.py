@@ -1,0 +1,50 @@
+"""repro.runtime — checkpointable multi-host partitioning runtime.
+
+The operational layer around the partitioners: a round-level state machine
+that can pause/snapshot/resume a run bit-identically (``driver``),
+crash-safe sharded snapshots with config/graph fingerprints (``snapshot``),
+durable partition artifacts that feed the GAS / GNN consumers without
+re-partitioning (``artifact``), and range-planned EdgeFile ingestion where
+each host-range reader streams only its slice of the store (``cluster``).
+See docs/DESIGN-runtime.md.
+
+Re-exports resolve lazily (PEP 562): ``cluster`` is importable without
+jax, which is what keeps its ``processes=True`` spawn workers lightweight
+— unpickling ``repro.runtime.cluster._ingest_worker`` must not drag the
+driver's jax import into every worker process.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ARTIFACT_VERSION": "repro.runtime.artifact",
+    "PartitionArtifact": "repro.runtime.artifact",
+    "load_artifact": "repro.runtime.artifact",
+    "save_artifact": "repro.runtime.artifact",
+    "host_block_ranges": "repro.runtime.cluster",
+    "ingest_edgefile": "repro.runtime.cluster",
+    "ingest_host_range": "repro.runtime.cluster",
+    "my_block_range": "repro.runtime.cluster",
+    "process_info": "repro.runtime.cluster",
+    "PartitionDriver": "repro.runtime.driver",
+    "RunSnapshot": "repro.runtime.snapshot",
+    "ShardedCheckpointManager": "repro.runtime.snapshot",
+    "SnapshotMismatch": "repro.runtime.snapshot",
+    "config_fingerprint": "repro.runtime.snapshot",
+    "graph_fingerprint": "repro.runtime.snapshot",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        value = getattr(importlib.import_module(_EXPORTS[name]), name)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

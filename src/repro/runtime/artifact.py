@@ -1,0 +1,261 @@
+"""Durable partition artifacts: the run's output as a store object.
+
+A finished partitioning run is worth exactly as much as the artifact it
+leaves behind — the paper's 70-minute trillion-edge run is useless if the
+assignment only ever lived in device memory.  ``save_artifact`` persists a
+:class:`~repro.core.partitioner.PartitionResult` as:
+
+* ``part_<p>.bin`` — partition ``p``'s edge set, compressed with the
+  ``repro.io.compress`` codec (three zigzag-delta varint streams: u, v and
+  the global edge ids).  A partition's edges are a sorted subset of the
+  canonical edge list, so the deltas are small and the shards compress like
+  PackedCSR adjacency (~3-4 B/edge vs 8 raw); each shard decodes
+  independently, so a consumer that wants only partition ``p`` touches
+  O(|E_p|), never O(M);
+* ``replicas.bin`` — the (N, P) vertex replica map, bit-packed (1 bit per
+  vertex-partition pair);
+* ``manifest.json`` — schema version, sizes, per-file byte lengths +
+  sha1s, per-partition edge counts, run stats (rounds, leftover,
+  replication factor) and the config/graph fingerprints of the run that
+  produced it.
+
+Writes stage into a dot-prefixed tmp dir and publish with one fsynced
+atomic rename (same crash-safety contract as the checkpoint store).
+
+``load_artifact`` reverses it: per-partition edge sets feed
+``apps.engine.build_sharded_graph`` / ``dist.redistribute`` directly, and
+the full ``edge_part`` / ``vparts`` reconstruct bit-identically for the
+GNN training path — no re-partitioning, ever.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.partitioner import PartitionResult
+from repro.io.compress import (varint_decode, varint_encode, zigzag_decode,
+                               zigzag_encode)
+from repro.train.checkpoint import publish_dir
+
+ARTIFACT_VERSION = 1
+MANIFEST = "manifest.json"
+
+
+def _delta(x: np.ndarray) -> np.ndarray:
+    d = np.asarray(x, np.int64).copy()
+    d[1:] -= np.asarray(x, np.int64)[:-1]
+    return d
+
+
+def _undelta(d: np.ndarray) -> np.ndarray:
+    return np.cumsum(np.asarray(d, np.int64))
+
+
+def _encode_stream(x: np.ndarray) -> bytes:
+    return varint_encode(zigzag_encode(_delta(x))).tobytes()
+
+
+def _decode_stream(raw: bytes, count: int) -> np.ndarray:
+    buf = np.frombuffer(raw, np.uint8)
+    return _undelta(zigzag_decode(varint_decode(buf, count)))
+
+
+def _sha1(raw: bytes) -> str:
+    return hashlib.sha1(raw).hexdigest()[:16]
+
+
+def save_artifact(dirpath: str | os.PathLike, result: PartitionResult,
+                  edges: np.ndarray, num_vertices: int,
+                  config_fingerprint: str | None = None,
+                  graph_fingerprint: str | None = None) -> "PartitionArtifact":
+    """Persist ``result`` (+ the edges it partitioned) under ``dirpath``."""
+    edges = np.asarray(edges)
+    edge_part = np.asarray(result.edge_part)
+    vparts = np.asarray(result.vparts, bool)
+    n = int(num_vertices)
+    m = int(edges.shape[0])
+    p_num = int(vparts.shape[1])
+    if edge_part.shape[0] != m:
+        raise ValueError(f"edge_part has {edge_part.shape[0]} entries for "
+                         f"{m} edges")
+    if (edge_part < 0).any():
+        raise ValueError("artifact requires a complete assignment — run the "
+                         "cleanup pass first (finalize the driver)")
+
+    final = Path(dirpath)
+    tmp = final.parent / f".tmp_{final.name}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    # one stable sort gives every partition's (ascending) eid list — not
+    # P full scans of the M-element assignment array
+    order = np.argsort(edge_part, kind="stable")
+    bounds = np.searchsorted(edge_part[order],
+                             np.arange(p_num + 1, dtype=np.int64))
+    parts_meta = []
+    for p in range(p_num):
+        eids = order[bounds[p]:bounds[p + 1]]
+        e = edges[eids]
+        blobs = (_encode_stream(e[:, 0]), _encode_stream(e[:, 1]),
+                 _encode_stream(eids))
+        raw = b"".join(blobs)
+        with open(tmp / f"part_{p:05d}.bin", "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        parts_meta.append({
+            "edges": int(eids.size),
+            "nbytes": [len(b) for b in blobs],
+            "sha1": _sha1(raw),
+        })
+
+    rep_raw = np.packbits(vparts, axis=None).tobytes()
+    with open(tmp / "replicas.bin", "wb") as f:
+        f.write(rep_raw)
+        f.flush()
+        os.fsync(f.fileno())
+
+    rf = float(vparts.sum() / max(n, 1))
+    manifest = {
+        "version": ARTIFACT_VERSION,
+        "num_vertices": n, "num_edges": m, "num_partitions": p_num,
+        "rounds": int(result.rounds), "leftover": int(result.leftover),
+        "replication_factor": rf,
+        "edges_per_part": [int(c) for c in result.edges_per_part],
+        "replicas_sha1": _sha1(rep_raw),
+        "partitions": parts_meta,
+        "config_fingerprint": config_fingerprint,
+        "graph_fingerprint": graph_fingerprint,
+    }
+    with open(tmp / MANIFEST, "w") as f:
+        f.write(json.dumps(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    publish_dir(tmp, final)
+    return PartitionArtifact(final)
+
+
+def load_artifact(dirpath: str | os.PathLike) -> "PartitionArtifact":
+    return PartitionArtifact(dirpath)
+
+
+class PartitionArtifact:
+    """Loader over a saved partition artifact directory.
+
+    Per-partition access (:meth:`partition_edges`, :meth:`partition_eids`)
+    decodes one shard; the whole-run views (:attr:`edge_part`,
+    :attr:`edges`, :attr:`vparts`) assemble lazily and are cached.
+    """
+
+    def __init__(self, dirpath: str | os.PathLike):
+        self.dir = Path(dirpath)
+        self.manifest = json.loads((self.dir / MANIFEST).read_text())
+        if self.manifest.get("version") != ARTIFACT_VERSION:
+            raise ValueError(f"{self.dir}: unsupported artifact version "
+                             f"{self.manifest.get('version')}")
+        self.num_vertices = int(self.manifest["num_vertices"])
+        self.num_edges = int(self.manifest["num_edges"])
+        self.num_partitions = int(self.manifest["num_partitions"])
+        self.edges_per_part = np.asarray(self.manifest["edges_per_part"],
+                                         np.int32)
+        self.rounds = int(self.manifest["rounds"])
+        self.leftover = int(self.manifest["leftover"])
+        self.replication_factor = float(self.manifest["replication_factor"])
+        self._cache: dict = {}
+
+    def _part_blobs(self, p: int, verify: bool = True,
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        meta = self.manifest["partitions"][p]
+        raw = (self.dir / f"part_{p:05d}.bin").read_bytes()
+        if verify and _sha1(raw) != meta["sha1"]:
+            raise IOError(f"checksum mismatch in partition {p} shard")
+        k = meta["edges"]
+        n0, n1, n2 = meta["nbytes"]
+        u = _decode_stream(raw[:n0], k)
+        v = _decode_stream(raw[n0:n0 + n1], k)
+        eids = _decode_stream(raw[n0 + n1:n0 + n1 + n2], k)
+        return u, v, eids
+
+    def partition_edges(self, p: int) -> np.ndarray:
+        """(|E_p|, 2) int32 edge endpoints of partition ``p``."""
+        u, v, _ = self._part_blobs(p)
+        return np.stack([u, v], axis=1).astype(np.int32)
+
+    def partition_eids(self, p: int) -> np.ndarray:
+        """Sorted global edge ids of partition ``p``."""
+        return self._part_blobs(p)[2].astype(np.int64)
+
+    def _assemble(self) -> None:
+        """One pass over the partition shards fills both whole-run views —
+        consumers that want ``edge_part`` *and* ``edges`` (``result()``,
+        ``sharded_graph()``) must not decode every shard twice."""
+        if "edge_part" in self._cache:
+            return
+        part = np.full(self.num_edges, -1, np.int32)
+        edges = np.empty((self.num_edges, 2), np.int32)
+        for p in range(self.num_partitions):
+            u, v, eids = self._part_blobs(p)
+            part[eids] = p
+            edges[eids, 0] = u
+            edges[eids, 1] = v
+        if not (part >= 0).all():
+            # a real integrity check, not an assert — it must survive -O:
+            # uncovered eids would surface as -1 assignments plus
+            # uninitialized edge rows in every downstream consumer
+            raise IOError(f"{self.dir}: partition eid streams cover only "
+                          f"{int((part >= 0).sum())} of {self.num_edges} "
+                          f"edges")
+        self._cache["edge_part"] = part
+        self._cache["edges"] = edges
+
+    @property
+    def edge_part(self) -> np.ndarray:
+        """(M,) int32 — reassembled from the per-partition eid streams."""
+        self._assemble()
+        return self._cache["edge_part"]
+
+    @property
+    def edges(self) -> np.ndarray:
+        """(M, 2) int32 — reassembled in global edge-id order."""
+        self._assemble()
+        return self._cache["edges"]
+
+    @property
+    def vparts(self) -> np.ndarray:
+        """(N, P) bool vertex replica map."""
+        if "vparts" not in self._cache:
+            raw = (self.dir / "replicas.bin").read_bytes()
+            if _sha1(raw) != self.manifest["replicas_sha1"]:
+                raise IOError("checksum mismatch in replica map")
+            bits = np.unpackbits(np.frombuffer(raw, np.uint8),
+                                 count=self.num_vertices
+                                 * self.num_partitions)
+            self._cache["vparts"] = bits.reshape(
+                self.num_vertices, self.num_partitions).astype(bool)
+        return self._cache["vparts"]
+
+    def result(self) -> PartitionResult:
+        """Reconstruct the :class:`PartitionResult` (bit-identical)."""
+        return PartitionResult(self.edge_part, self.vparts,
+                               self.edges_per_part.copy(), self.rounds,
+                               self.leftover)
+
+    def sharded_graph(self, num_devices: int | None = None):
+        """Feed the GAS engine directly from the artifact — the
+        "no re-partitioning" hand-off (``apps.engine.build_sharded_graph``).
+        """
+        from repro.apps.engine import build_sharded_graph
+
+        d = num_devices or self.num_partitions
+        return build_sharded_graph(self.edges, self.edge_part,
+                                   self.num_vertices, d)
+
+
+__all__ = ["ARTIFACT_VERSION", "PartitionArtifact", "load_artifact",
+           "save_artifact"]

@@ -1,0 +1,199 @@
+"""Multi-host ingestion: canonical EdgeFile block ranges → SPMD edge shards.
+
+The paper's 256-machine runs never materialize the full edge list anywhere:
+each machine reads a slice of the store and hashes its edges to owning
+allocation processes.  This module reproduces that shape on top of the
+``repro.io`` store:
+
+* :func:`host_block_ranges` cuts the canonical EdgeFile's block index into
+  ``num_hosts`` contiguous ranges balanced by edge count — a pure function
+  of the manifest (the block index), so every host computes the same plan
+  with no coordination;
+* :func:`ingest_host_range` is the per-host unit of work: stream only your
+  block range (``EdgeFile.iter_blocks(start, stop)``), 2D-hash each edge to
+  its owning device, return per-device rows — peak memory O(range), never
+  O(M);
+* :func:`ingest_edgefile` assembles the per-range results into the padded
+  (D, C, 2) shard layout ``partition_spmd`` / the runtime driver consume.
+  This assembly is *single-controller*: the calling process ends up holding
+  the full shard layout (which the shard_map program needs as device
+  buffers anyway).  With ``processes=True`` each range is read and hashed
+  in its own worker process — the honest local rehearsal of the per-host
+  memory envelope, where no *reader* ever holds more than its range.
+
+A true multi-controller deployment (one jax process per host) calls
+:func:`my_block_range` — which uses ``jax.process_index()`` /
+``jax.process_count()`` to pick this process's slice of the shared plan —
+and :func:`ingest_host_range` on it; driving the SPMD round state machine
+across those processes is the remaining ROADMAP item, not something this
+module does by itself.
+
+Because hosts own *contiguous* ranges processed in host order, the
+assembled shards are bit-identical to the single-host
+``repro.io.stream.shard_edges_stream`` (asserted by tests/test_runtime.py)
+— range-based ingestion changes where bytes flow, not what the partitioner
+sees.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor
+
+import numpy as np
+
+from repro.io.csr import grid_assign_host
+from repro.io.edgefile import EdgeFile
+
+
+def process_info() -> tuple[int, int]:
+    """(host index, host count) under ``jax.distributed``; (0, 1) locally.
+
+    Import is lazy and failure-tolerant so the ingestion plan stays usable
+    from jax-free tooling (e.g. a pure-numpy repartitioning script).
+    """
+    try:
+        import jax
+
+        return int(jax.process_index()), int(jax.process_count())
+    except Exception:
+        return 0, 1
+
+
+def host_block_ranges(ef: EdgeFile, num_hosts: int) -> list[tuple[int, int]]:
+    """Contiguous block ranges ``[(start, stop), ...]``, one per host,
+    balanced by edge count via the block index (no data reads).
+
+    Every host gets a range (possibly empty); ranges tile ``[0,
+    num_blocks)`` in order, which is what keeps multi-host assembly
+    bit-identical to the sequential pass.
+    """
+    if num_hosts < 1:
+        raise ValueError("num_hosts must be >= 1")
+    counts = np.asarray(ef.block_counts, np.int64)
+    total = int(counts.sum())
+    bounds = [0]
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    for h in range(1, num_hosts):
+        target = total * h // num_hosts
+        cut = int(np.searchsorted(cum, target, side="left"))
+        bounds.append(min(max(cut, bounds[-1]), ef.num_blocks))
+    bounds.append(ef.num_blocks)
+    return [(bounds[h], bounds[h + 1]) for h in range(num_hosts)]
+
+
+def my_block_range(ef: EdgeFile, num_hosts: int | None = None,
+                   ) -> tuple[int, int]:
+    """This process's range under the shared plan (jax.distributed aware)."""
+    idx, count = process_info()
+    hosts = num_hosts or count
+    if idx >= hosts:
+        raise ValueError(f"process index {idx} has no range in a "
+                         f"{hosts}-host plan — num_hosts must be >= "
+                         f"jax.process_count() ({count})")
+    return host_block_ranges(ef, hosts)[idx]
+
+
+def ingest_host_range(path: str | os.PathLike, start: int, stop: int,
+                      num_devices: int, salt: int = 0,
+                      ) -> tuple[list[np.ndarray], np.ndarray]:
+    """One host's ingestion: stream blocks ``[start, stop)`` of the
+    EdgeFile at ``path``, hash every edge to its owning device.
+
+    Returns ``(rows, dev)``: ``rows[d]`` is the (k_d, 2) int32 edges this
+    range contributes to device ``d`` (file order preserved) and ``dev``
+    the (range_edges,) int32 per-edge device assignment.  Opens its own
+    file handle so it is safe to run in a worker process.
+    """
+    with EdgeFile(path) as ef:
+        parts: list[list[np.ndarray]] = [[] for _ in range(num_devices)]
+        devs = []
+        for blk in ef.iter_blocks(start, stop):
+            dev = grid_assign_host(blk, num_devices, salt=salt)
+            devs.append(dev)
+            for d in np.unique(dev):
+                parts[d].append(np.ascontiguousarray(blk[dev == d],
+                                                     dtype=np.int32))
+    rows = [np.concatenate(p) if p else np.zeros((0, 2), np.int32)
+            for p in parts]
+    dev = (np.concatenate(devs).astype(np.int32) if devs
+           else np.zeros((0,), np.int32))
+    return rows, dev
+
+
+def _ingest_worker(args):
+    return ingest_host_range(*args)
+
+
+def ingest_edgefile(ef: EdgeFile, num_devices: int,
+                    num_hosts: int | None = None, salt: int = 0,
+                    processes: bool = False, with_edges: bool = False):
+    """Range-planned ingestion into the padded shard layout
+    (single-controller assembly — the caller holds the full result).
+
+    Same return contract as ``repro.io.stream.shard_edges_stream``:
+    ``(shards (D, C, 2), masks (D, C), cap, dev (M,))`` plus the flat edge
+    list when ``with_edges`` — and bit-identical output, because host
+    ranges are contiguous and assembled in host order.
+
+    ``num_hosts`` defaults to ``jax.process_count()`` (1 locally) so the
+    plan matches a co-running multi-process job.  With ``processes=True``
+    each host range is read and hashed in its own worker process, so no
+    reader holds more than its range.
+    """
+    if num_hosts is None:
+        num_hosts = max(process_info()[1], 1)
+    m = int(ef.num_edges)
+    if int(ef.num_vertices) > (1 << 31):
+        raise ValueError("shard arrays are int32 — vertex ids >= 2^31 "
+                         "would wrap silently")
+    ranges = host_block_ranges(ef, num_hosts)
+    jobs = [(ef.path, start, stop, num_devices, salt)
+            for start, stop in ranges]
+    if processes and num_hosts > 1:
+        # spawn, not fork: the caller usually has jax (and its thread pool)
+        # loaded, and forking a multithreaded process can deadlock.  The
+        # workers themselves are jax-free (grid_assign_host is numpy).
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=min(num_hosts,
+                                                 os.cpu_count() or 1),
+                                 mp_context=ctx) as ex:
+            results = list(ex.map(_ingest_worker, jobs))
+    else:
+        results = [ingest_host_range(*j) for j in jobs]
+
+    counts = np.zeros(num_devices, np.int64)
+    for rows, _ in results:
+        for d in range(num_devices):
+            counts[d] += rows[d].shape[0]
+    cap = int(counts.max()) if m else 1
+    shards = np.zeros((num_devices, cap, 2), np.int32)
+    masks = np.zeros((num_devices, cap), bool)
+    dev_full = np.empty(m, np.int32)
+    edges = np.empty((m, 2), np.int32) if with_edges else None
+    cursors = np.zeros(num_devices, np.int64)
+    off = 0
+    for (rows, dev), (start, stop) in zip(results, ranges):
+        k = dev.shape[0]
+        dev_full[off:off + k] = dev
+        if with_edges and k:
+            # reassemble this range's flat edge list from per-device rows:
+            # rows[d] holds the range's device-d edges in file order, so a
+            # scatter by assignment position restores the original order
+            flat = np.empty((k, 2), np.int32)
+            for d in range(num_devices):
+                flat[np.flatnonzero(dev == d)] = rows[d]
+            edges[off:off + k] = flat
+        off += k
+        for d in range(num_devices):
+            c = int(cursors[d])
+            shards[d, c:c + rows[d].shape[0]] = rows[d]
+            masks[d, c:c + rows[d].shape[0]] = True
+            cursors[d] += rows[d].shape[0]
+    if with_edges:
+        return shards, masks, cap, dev_full, edges
+    return shards, masks, cap, dev_full
+
+
+__all__ = ["host_block_ranges", "ingest_edgefile", "ingest_host_range",
+           "my_block_range", "process_info"]

@@ -1,0 +1,251 @@
+"""Round-level state machine over Distributed NE — pause, snapshot, resume.
+
+``partition`` / ``partition_spmd`` are fire-and-forget: one jit call runs
+every round inside a ``while_loop`` and nothing survives a crash.  The
+:class:`PartitionDriver` re-expresses the same computation as a host-driven
+state machine — one jit call per paper round, on *exactly the traced round
+function the whole-run jits use* (``core.partitioner._round`` /
+``dist.partitioner_sm._spmd_round``).  All round state is integer or
+counter-mode PRNG, so stepping is bit-identical to the uninterrupted
+while_loop, and therefore so is kill-at-round-k + resume-from-snapshot
+(asserted by tests/test_runtime.py and the 8-device SPMD checks).
+
+The driver owns the operational envelope the paper's 256-machine runs
+presume:
+
+* **ingestion** — a Graph shards in memory; a canonical EdgeFile shards
+  through :mod:`repro.runtime.cluster` host block ranges, each range
+  streamed and hashed independently (optionally in worker processes).
+  The driver itself is single-controller — it assembles the full shard
+  layout the shard_map program needs; per-process execution over the same
+  plan is the ROADMAP follow-up;
+* **snapshots** — every ``snapshot_every`` rounds the round state goes
+  through :class:`repro.runtime.snapshot.RunSnapshot` (sharded files,
+  fsync + atomic rename, config/graph fingerprints).  Resume against the
+  wrong EdgeFile or NEConfig fails loudly;
+* **finalize** — stitch shard-order assignments back to edge order, run
+  the shared water-filling cleanup, hand back the standard
+  :class:`PartitionResult`; optionally persist it as a
+  :mod:`repro.runtime.artifact` for the GAS / GNN consumers.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, as_graph, shard_edges
+from repro.core.partitioner import (NEConfig, NEState, PartitionResult,
+                                    alpha_limit, finalize_result, ne_done,
+                                    ne_init_state, ne_round_step)
+from repro.dist import compat
+from repro.dist.partitioner_sm import (AXIS, SpmdState, spmd_done,
+                                       spmd_init_state, spmd_round_step,
+                                       stitch_edge_part)
+from repro.io.edgefile import EdgeFile
+from repro.io.stream import require_canonical
+from repro.runtime import cluster
+from repro.runtime.artifact import PartitionArtifact, save_artifact
+from repro.runtime.snapshot import (RunSnapshot, SnapshotMismatch,
+                                    config_fingerprint, graph_fingerprint)
+
+
+class PartitionDriver:
+    """Interruptible, resumable Distributed NE run.
+
+    ``mode="spmd"`` (default) drives the shard_map partitioner over
+    ``num_devices``; ``mode="single"`` drives the single-controller
+    fixed point.  One :meth:`step` == one paper round; :meth:`run` loops
+    to completion with periodic snapshots; :meth:`resume` rebuilds a
+    driver from the latest (or a chosen) snapshot.
+    """
+
+    def __init__(self, source, cfg: NEConfig, num_devices: int | None = None,
+                 mode: str = "spmd", snapshot_dir: str | os.PathLike | None = None,
+                 snapshot_every: int = 0, keep: int = 3,
+                 num_hosts: int | None = None, ingest_processes: bool = False):
+        if mode not in ("spmd", "single"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.mode = mode
+        self.source = source
+        self.snapshot_every = int(snapshot_every)
+        self._result: PartitionResult | None = None
+        self._done: bool | None = None
+
+        if mode == "single":
+            g = source if isinstance(source, EdgeFile) else as_graph(source)
+            self._graph_fp = graph_fingerprint(g)
+            g = as_graph(g)
+            self.cfg = cfg.clamped(g.num_vertices)
+            self._graph = g
+            self.n, self.m = g.num_vertices, g.num_edges
+            self._edges = np.asarray(g.edges)
+            self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                     self.cfg.num_partitions)
+            self.state: NEState | SpmdState = ne_init_state(g, self.cfg)
+        else:
+            self._graph_fp = graph_fingerprint(source)
+            d = num_devices or len(jax.devices())
+            self.num_devices = max(1, min(d, len(jax.devices())))
+            self.n, self.m, self._edges, shards, masks, self._dev = \
+                self._ingest(source, self.num_devices, num_hosts,
+                             ingest_processes)
+            self.cfg = cfg.clamped(self.n)
+            self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                     self.cfg.num_partitions)
+            self.mesh = compat.make_mesh((self.num_devices,), (AXIS,))
+            self._u_sh = jnp.asarray(shards[:, :, 0])
+            self._v_sh = jnp.asarray(shards[:, :, 1])
+            self._mask_sh = jnp.asarray(masks)
+            self.state = spmd_init_state(shards, masks, self.n, self.cfg)
+
+        self.snapshot = (RunSnapshot(snapshot_dir, self.cfg, self._graph_fp,
+                                     keep=keep)
+                        if snapshot_dir is not None else None)
+
+    @staticmethod
+    def _ingest(source, num_devices: int, num_hosts: int | None,
+                processes: bool):
+        """Edge shards + metadata, via the multi-host plan for store
+        handles (cluster block ranges) or in-memory for a Graph."""
+        if isinstance(source, Graph):
+            edges = np.asarray(source.edges)
+            shards, masks, _, dev = shard_edges(edges, num_devices)
+            return (source.num_vertices, source.num_edges, edges, shards,
+                    masks, dev)
+        if not isinstance(source, EdgeFile):
+            raise TypeError("PartitionDriver takes a Graph or a canonical "
+                            f"EdgeFile, got {type(source).__name__}")
+        require_canonical(source)
+        shards, masks, _, dev, edges = cluster.ingest_edgefile(
+            source, num_devices, num_hosts=num_hosts, processes=processes,
+            with_edges=True)
+        return (int(source.num_vertices), int(source.num_edges), edges,
+                shards, masks, dev)
+
+    # -- state machine ------------------------------------------------------
+
+    @property
+    def rounds(self) -> int:
+        return int(self.state.rounds)
+
+    @property
+    def done(self) -> bool:
+        # cached per state: run() + step() both consult it every round, and
+        # the single-controller check is a full edge_part host transfer
+        if self._done is None:
+            if self.m == 0:
+                self._done = True
+            elif self.mode == "single":
+                self._done = ne_done(self.state, self.cfg)
+            else:
+                self._done = spmd_done(self.state, self.cfg)
+        return self._done
+
+    def step(self) -> int:
+        """Advance one paper round; returns the completed round count.
+
+        Stepping past :attr:`done` is a no-op (the driver never runs the
+        round function on a finished state, matching the while_loop cond).
+        """
+        if self.done:
+            return self.rounds
+        if self.mode == "single":
+            self.state = jax.block_until_ready(ne_round_step(
+                self._graph, self.cfg, self.limit, self.state))
+        else:
+            self.state = jax.block_until_ready(spmd_round_step(
+                self.cfg, self.limit, self.n, self.mesh, self._u_sh,
+                self._v_sh, self._mask_sh, self.state))
+        self._result = None
+        self._done = None
+        if (self.snapshot is not None and self.snapshot_every
+                and self.rounds % self.snapshot_every == 0):
+            self.save_snapshot()
+        return self.rounds
+
+    def run(self) -> PartitionResult:
+        """Step to the fixed point (snapshotting as configured), finalize."""
+        while not self.done:
+            self.step()
+        return self.finalize()
+
+    def finalize(self) -> PartitionResult:
+        """Stitch + cleanup epilogue; cached until the state advances."""
+        if self._result is not None:
+            return self._result
+        p_num = self.cfg.num_partitions
+        if self.m == 0:
+            self._result = PartitionResult(
+                np.zeros((0,), np.int32), np.zeros((self.n, p_num), bool),
+                np.zeros((p_num,), np.int32), 0, 0)
+            return self._result
+        if self.mode == "single":
+            edge_part = self.state.edge_part
+        else:
+            edge_part = stitch_edge_part(np.asarray(self.state.edge_part),
+                                         self._dev, self.m)
+        self._result = finalize_result(edge_part, self.state.vparts,
+                                       self.state.edges_per_part,
+                                       self._edges, self.cfg, self.rounds)
+        return self._result
+
+    # -- snapshots ----------------------------------------------------------
+
+    def save_snapshot(self):
+        """Persist the current round state (crash-safe, fingerprinted)."""
+        if self.snapshot is None:
+            raise RuntimeError("driver was built without a snapshot_dir")
+        fields = {k: np.asarray(v) for k, v in self.state._asdict().items()}
+        return self.snapshot.save_state(self.rounds, fields, self.mode)
+
+    def restore_snapshot(self, round_k: int | None = None) -> int:
+        """Load round state from the snapshot store (latest by default)."""
+        if self.snapshot is None:
+            raise RuntimeError("driver was built without a snapshot_dir")
+        fields, rnd, mode = self.snapshot.restore_state(round_k)
+        if mode != self.mode:
+            raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "
+                                   f"driver is {self.mode!r}")
+        cls = NEState if self.mode == "single" else SpmdState
+        want = cls._fields
+        missing = set(want) - set(fields)
+        if missing:
+            raise SnapshotMismatch(f"snapshot is missing fields {missing}")
+        if self.mode == "spmd":
+            have = tuple(fields["edge_part"].shape)
+            expect = tuple(self._mask_sh.shape)
+            if have != expect:
+                raise SnapshotMismatch(
+                    f"snapshot edge_part shard layout {have} != current "
+                    f"{expect} — resume needs the same device count")
+        self.state = cls(**{k: jnp.asarray(fields[k]) for k in want})
+        self._result = None
+        self._done = None
+        return rnd
+
+    @classmethod
+    def resume(cls, source, cfg: NEConfig,
+               snapshot_dir: str | os.PathLike, round_k: int | None = None,
+               **kwargs) -> "PartitionDriver":
+        """Rebuild a driver from ``snapshot_dir`` and continue from the
+        latest (or ``round_k``-th) snapshot.  The edge shards are re-derived
+        from ``source``; the snapshot's fingerprints guarantee that is the
+        same derivation the interrupted run made."""
+        drv = cls(source, cfg, snapshot_dir=snapshot_dir, **kwargs)
+        drv.restore_snapshot(round_k)
+        return drv
+
+    # -- durable output -----------------------------------------------------
+
+    def save_artifact(self, dirpath: str | os.PathLike) -> PartitionArtifact:
+        """Finalize and persist the run's output as a partition artifact."""
+        res = self.finalize()
+        return save_artifact(dirpath, res, self._edges, self.n,
+                             config_fingerprint=config_fingerprint(self.cfg),
+                             graph_fingerprint=self._graph_fp)
+
+
+__all__ = ["PartitionDriver"]

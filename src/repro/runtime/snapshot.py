@@ -1,0 +1,221 @@
+"""Per-round partitioner snapshots: sharded checkpoint layout + fingerprints.
+
+Two layers:
+
+* :class:`ShardedCheckpointManager` — a ``train.checkpoint.CheckpointManager``
+  extension where designated arrays are written one file per leading-axis
+  shard (``<name>.shard<i>.bin``) instead of into the monolithic
+  ``data.bin``.  In a multi-host deployment host ``h`` writes and reads only
+  its own shard file; locally the manager stacks them back transparently.
+  It inherits the crash-safety contract: everything stages in a dot-prefixed
+  tmp dir, every file is fsynced, and the step publishes with one atomic
+  rename — a kill at any point leaves the previous step intact.
+
+* :class:`RunSnapshot` — the partitioner-specific façade: saves a
+  ``SpmdState`` / ``NEState`` keyed by round number, stamps the manifest
+  with config + graph fingerprints, and *refuses to restore* against a
+  different ``NEConfig`` or a different edge source — a resume that
+  silently mixed graphs would produce garbage partitions that still look
+  plausible.
+
+Snapshots hold only the round state (edge assignments, replica sets,
+D_rest, |E_p|, PRNG key, counters) — never the edge shards themselves,
+which are re-derived deterministically from the source; the graph
+fingerprint is what makes that re-derivation safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.partitioner import NEConfig
+from repro.io.edgefile import EdgeFile
+from repro.train.checkpoint import CheckpointManager, fsync_path
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+def config_fingerprint(cfg: NEConfig) -> str:
+    """Stable digest of every NEConfig field — any hyper-parameter change
+    (partitions, α, λ, seed, chunking…) changes the expansion trajectory,
+    so any change must invalidate a resume."""
+    payload = json.dumps(dataclasses.asdict(cfg), sort_keys=True)
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def graph_fingerprint(source) -> str:
+    """Digest identifying the edge source a snapshot was taken against.
+
+    For an :class:`EdgeFile` this hashes the header fields plus the full
+    per-block (count, vmin, vmax) index — no data blocks are read, so it
+    stays O(num_blocks) even for store-scale files while still catching
+    any edge-content change that moves a block's count or vertex range.
+    In-memory sources hash the edge bytes themselves.
+    """
+    h = hashlib.sha1()
+    if isinstance(source, EdgeFile):
+        h.update(f"edgefile:{source.num_vertices}:{source.num_edges}:"
+                 f"{source.block_size}:{source.flags}".encode())
+        h.update(np.ascontiguousarray(source.block_counts).tobytes())
+        h.update(np.ascontiguousarray(source.block_vmin).tobytes())
+        h.update(np.ascontiguousarray(source.block_vmax).tobytes())
+        return h.hexdigest()[:16]
+    edges = np.asarray(source.edges if hasattr(source, "edges") else source)
+    n = (source.num_vertices if hasattr(source, "num_vertices")
+         else int(edges.max()) + 1 if edges.size else 0)
+    h.update(f"edges:{n}:{edges.shape[0]}".encode())
+    h.update(np.ascontiguousarray(edges, dtype=np.int64).tobytes())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# sharded checkpoint manager
+# ---------------------------------------------------------------------------
+
+class ShardedCheckpointManager(CheckpointManager):
+    """Checkpoint dirs with per-shard array files alongside ``data.bin``.
+
+    ``save(step, tree, sharded={...})`` splits each array in ``sharded``
+    along its leading axis into one fsynced file per slice; the manifest
+    records per-shard dtype/shape/sha1 so a restore can verify — or load —
+    a single host's shard without touching the others.
+    """
+
+    def save(self, step: int, tree, sharded: dict | None = None,
+             extra_meta: dict | None = None) -> Path:
+        import jax
+
+        from repro.train.checkpoint import _flatten
+
+        tmp, manifest = self._begin(step, extra_meta)
+        self._write_data(tmp, _flatten(jax.device_get(tree)), manifest)
+        manifest["shards"] = {}
+        for name, arr in (sharded or {}).items():
+            a = np.asarray(jax.device_get(arr))
+            entries = []
+            for i in range(a.shape[0]):
+                raw = np.ascontiguousarray(a[i]).tobytes()
+                path = tmp / f"{name}.shard{i:05d}.bin"
+                with open(path, "wb") as f:
+                    f.write(raw)
+                    f.flush()
+                    os.fsync(f.fileno())
+                entries.append({
+                    "dtype": str(a.dtype), "shape": list(a.shape[1:]),
+                    "sha1": hashlib.sha1(raw).hexdigest()[:16],
+                })
+            manifest["shards"][name] = entries
+        return self._publish(step, tmp, manifest)
+
+    def load_shard(self, step: int, name: str, index: int,
+                   verify: bool = True) -> np.ndarray:
+        """One shard slice — the only thing host ``index`` ever reads."""
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        meta = manifest["shards"][name][index]
+        raw = (d / f"{name}.shard{index:05d}.bin").read_bytes()
+        if verify and hashlib.sha1(raw).hexdigest()[:16] != meta["sha1"]:
+            raise IOError(f"checksum mismatch in {name}.shard{index} "
+                          f"@ step {step}")
+        return np.frombuffer(raw, meta["dtype"]).reshape(meta["shape"])
+
+    def load_sharded(self, step: int, name: str,
+                     verify: bool = True) -> np.ndarray:
+        """All shards of ``name`` stacked back along the leading axis."""
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        count = len(manifest["shards"][name])
+        return np.stack([self.load_shard(step, name, i, verify)
+                         for i in range(count)])
+
+    def shard_names(self, step: int) -> list[str]:
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        return sorted(manifest.get("shards", {}))
+
+
+# ---------------------------------------------------------------------------
+# partitioner-run façade
+# ---------------------------------------------------------------------------
+
+class SnapshotMismatch(RuntimeError):
+    """Resume attempted against a different graph or NEConfig."""
+
+
+class RunSnapshot:
+    """Round-keyed snapshots of a partitioning run.
+
+    ``save_state`` takes the raw field dict of an ``SpmdState`` /
+    ``NEState`` (numpy or jax arrays), stores ``edge_part`` sharded when it
+    carries a leading device axis, and stamps fingerprints; ``restore_state``
+    validates them and hands back plain numpy arrays keyed by field name.
+    """
+
+    def __init__(self, directory: str | os.PathLike, cfg: NEConfig,
+                 graph_fp: str, keep: int = 3):
+        self.mgr = ShardedCheckpointManager(directory, keep=keep)
+        self.cfg_fp = config_fingerprint(cfg)
+        self.graph_fp = graph_fp
+
+    def save_state(self, round_k: int, fields: dict, mode: str) -> Path:
+        fields = {k: np.asarray(v) for k, v in fields.items()}
+        sharded = None
+        if mode == "spmd":
+            sharded = {"edge_part": fields.pop("edge_part")}
+        meta = {"mode": mode, "round": int(round_k),
+                "config_fingerprint": self.cfg_fp,
+                "graph_fingerprint": self.graph_fp}
+        return self.mgr.save(round_k, fields, sharded=sharded,
+                             extra_meta=meta)
+
+    def rounds(self) -> list[int]:
+        return self.mgr.steps()
+
+    def restore_state(self, round_k: int | None = None,
+                      ) -> tuple[dict, int, str]:
+        """(fields, round, mode) of the requested (default: latest) valid
+        snapshot.  Fingerprint mismatch raises :class:`SnapshotMismatch`
+        loudly instead of falling back — a stale-but-valid older snapshot
+        of the *wrong run* must never win silently."""
+        candidates = ([round_k] if round_k is not None
+                      else list(reversed(self.mgr.steps())))
+        last_err: Exception | None = None
+        for step in candidates:
+            try:
+                meta = self.mgr.meta(step)
+                self._check(meta)
+                fields = dict(self.mgr._load_flat(step))
+                for name in self.mgr.shard_names(step):
+                    fields[name] = self.mgr.load_sharded(step, name)
+            except SnapshotMismatch:
+                raise
+            except (IOError, json.JSONDecodeError, ValueError, KeyError) as e:
+                last_err = e          # half-written step → try the previous
+                continue
+            return fields, int(meta["round"]), meta["mode"]
+        raise FileNotFoundError(
+            f"no restorable snapshot in {self.mgr.dir}"
+            + (f" (last error: {last_err})" if last_err else ""))
+
+    def _check(self, meta: dict) -> None:
+        if meta.get("config_fingerprint") != self.cfg_fp:
+            raise SnapshotMismatch(
+                f"snapshot config fingerprint {meta.get('config_fingerprint')}"
+                f" != current NEConfig {self.cfg_fp} — refusing to resume a "
+                f"different run")
+        if meta.get("graph_fingerprint") != self.graph_fp:
+            raise SnapshotMismatch(
+                f"snapshot graph fingerprint {meta.get('graph_fingerprint')} "
+                f"!= current edge source {self.graph_fp} — refusing to resume "
+                f"against a different graph")
+
+
+__all__ = ["RunSnapshot", "ShardedCheckpointManager", "SnapshotMismatch",
+           "config_fingerprint", "graph_fingerprint", "fsync_path"]

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import shutil
 from pathlib import Path
 
@@ -17,6 +18,41 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+def fsync_path(path: Path) -> None:
+    """fsync a file or directory — the directory fsync is what makes the
+    tmp→final rename durable across power loss, not just process crash."""
+    flags = os.O_RDONLY | (os.O_DIRECTORY if path.is_dir() else 0)
+    fd = os.open(path, flags)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def publish_dir(tmp: Path, final: Path) -> None:
+    """Atomically publish a fully-staged ``tmp`` dir at ``final``.
+
+    The one crash-safe publish protocol, shared by the checkpoint store
+    and the partition artifact store: fsync the staged dir, swap with two
+    renames when ``final`` already exists (the old version stays visible
+    until the new one is fully in place, and the crash window is the
+    instant between renames — during which both complete dirs still exist
+    on disk), fsync the parent.  Stale ``.trash_*`` leftovers of an
+    earlier crashed swap are reclaimed up front, whichever branch runs.
+    """
+    fsync_path(tmp)
+    trash = final.parent / f".trash_{final.name}"
+    if trash.exists():
+        shutil.rmtree(trash)               # orphan of a killed swap
+    if final.exists():
+        final.rename(trash)
+        tmp.rename(final)
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        tmp.rename(final)
+    fsync_path(final.parent)
 
 
 def _flatten(tree, prefix=""):
@@ -52,13 +88,29 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> Path:
         return self.dir / f"step_{step:010d}"
 
-    def save(self, step: int, tree) -> Path:
-        flat = _flatten(jax.device_get(tree))
+    def save(self, step: int, tree, extra_meta: dict | None = None) -> Path:
+        """Crash-safe save: everything is staged in a dot-prefixed tmp dir
+        (invisible to :meth:`steps`), each file is flushed + fsynced, and
+        the step is published by one atomic rename followed by a parent-dir
+        fsync — a crash at ANY point leaves either the previous step intact
+        or the new one complete, never a half-readable step dir.
+        """
+        tmp, manifest = self._begin(step, extra_meta)
+        self._write_data(tmp, _flatten(jax.device_get(tree)), manifest)
+        return self._publish(step, tmp, manifest)
+
+    # -- staged save internals (subclassed by the sharded runtime manager) --
+    def _begin(self, step: int, extra_meta: dict | None):
         tmp = self.dir / f".tmp_step_{step:010d}"
         if tmp.exists():
-            shutil.rmtree(tmp)
+            shutil.rmtree(tmp)             # leftover of a killed save
         tmp.mkdir(parents=True)
         manifest = {"step": step, "arrays": {}}
+        if extra_meta:
+            manifest["meta"] = extra_meta
+        return tmp, manifest
+
+    def _write_data(self, tmp: Path, flat: dict, manifest: dict) -> None:
         with open(tmp / "data.bin", "wb") as f:
             off = 0
             for name, arr in flat.items():
@@ -71,11 +123,16 @@ class CheckpointManager:
                     "sha1": hashlib.sha1(raw).hexdigest()[:16],
                 }
                 off += len(raw)
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _publish(self, step: int, tmp: Path, manifest: dict) -> Path:
+        with open(tmp / "manifest.json", "w") as f:
+            f.write(json.dumps(manifest))
+            f.flush()
+            os.fsync(f.fileno())
         final = self._step_dir(step)
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)          # atomic publish
+        publish_dir(tmp, final)
         self._gc()
         return final
 
@@ -83,11 +140,15 @@ class CheckpointManager:
         steps = sorted(self.steps())
         for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        for p in self.dir.glob(".trash_step_*"):
+            shutil.rmtree(p, ignore_errors=True)   # killed-swap orphans
 
     def steps(self) -> list[int]:
+        """Published steps only: dot-prefixed staging dirs of killed saves
+        never match, and a dir missing either file is skipped."""
         out = []
         for p in self.dir.glob("step_*"):
-            if (p / "manifest.json").exists():
+            if (p / "manifest.json").exists() and (p / "data.bin").exists():
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
 
@@ -104,6 +165,11 @@ class CheckpointManager:
                 meta["shape"])
         return flat
 
+    def meta(self, step: int) -> dict:
+        """The ``extra_meta`` dict stored with a step ({} if none)."""
+        d = self._step_dir(step)
+        return json.loads((d / "manifest.json").read_text()).get("meta", {})
+
     def restore(self, template, step: int | None = None, shardings=None):
         """Restore into the structure of ``template``; optionally re-shard
         with a pytree of NamedSharding (elastic restore on a new mesh).
@@ -112,9 +178,19 @@ class CheckpointManager:
         for s in reversed(steps):
             try:
                 flat = self._load_flat(s)
-            except (IOError, json.JSONDecodeError):
+            except (IOError, json.JSONDecodeError, ValueError):
+                # truncated data.bin (frombuffer/reshape ValueError),
+                # checksum mismatch, unreadable manifest — a torn step dir
+                # must fall back, not crash the resume
                 continue
-            tree = _unflatten(flat, template)
+            try:
+                tree = _unflatten(flat, template)
+            except KeyError as e:
+                # an intact checkpoint that simply lacks a template field is
+                # a structural mismatch, not corruption — falling back would
+                # misreport it as "no restorable checkpoint"
+                raise KeyError(f"checkpoint step {s} does not match the "
+                               f"restore template: missing {e}") from e
 
             def put(x, t, sh=None):
                 arr = jnp.asarray(np.asarray(x), dtype=t.dtype

@@ -184,4 +184,32 @@ for dd in range(8):
     ok_redis &= key_got.tolist() == key_want.tolist()
 out["redistribute_ok"] = bool(ok_redis)
 
+# --- runtime driver: kill-at-round-k resume bit-identity on 8 devices -------
+import tempfile  # noqa: E402
+
+from repro.runtime import PartitionDriver, load_artifact  # noqa: E402
+
+ne_cfg = NEConfig(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
+with tempfile.TemporaryDirectory() as td:
+    snap_dir = td + "/snap"
+    drv = PartitionDriver(g, ne_cfg, snapshot_dir=snap_dir, snapshot_every=1,
+                          keep=100_000)
+    res_drv = drv.run()
+    out["driver_matches_spmd"] = bool(
+        (res_drv.edge_part == res_sm.edge_part).all()
+        and (res_drv.vparts == res_sm.vparts).all()
+        and res_drv.rounds == res_sm.rounds)
+    k = max(res_drv.rounds // 2, 1)
+    drv2 = PartitionDriver.resume(g, ne_cfg, snap_dir, round_k=k)
+    res_back = drv2.run()
+    out["driver_resume_identical"] = bool(
+        (res_back.edge_part == res_drv.edge_part).all()
+        and (res_back.vparts == res_drv.vparts).all())
+    art = drv.save_artifact(td + "/art")
+    loaded = load_artifact(td + "/art")
+    out["artifact_roundtrip"] = bool(
+        (loaded.edge_part == res_drv.edge_part).all()
+        and (loaded.vparts == res_drv.vparts).all()
+        and (loaded.edges == e).all())
+
 print("RESULT " + json.dumps(out))

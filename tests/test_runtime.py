@@ -1,0 +1,341 @@
+"""repro.runtime tests: round-stepping bit-identity, snapshot/resume,
+partition artifacts, multi-host ingestion, sharded checkpoints.
+
+The resume contract under test is the ISSUE's acceptance criterion: a run
+killed after round k and resumed from its latest snapshot produces
+bit-identical vparts and edge assignments to an uninterrupted run, and the
+saved artifact reloads into the GAS path without re-partitioning.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import NEConfig, evaluate, partition
+from repro.dist.partitioner_sm import partition_spmd
+from repro.graphs.rmat import rmat
+from repro.io.stream import shard_edges_stream
+from repro.runtime import (PartitionDriver, SnapshotMismatch,
+                           config_fingerprint, graph_fingerprint,
+                           host_block_ranges, ingest_edgefile, load_artifact,
+                           save_artifact)
+from repro.runtime.snapshot import RunSnapshot, ShardedCheckpointManager
+
+SCALE = 12          # RMAT scale for the resume bit-identity criterion
+CFG = NEConfig(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def graph12():
+    return rmat(SCALE, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def snapped_run(graph12, tmp_path_factory):
+    """One uninterrupted driver run with a snapshot after every round."""
+    snap_dir = tmp_path_factory.mktemp("runtime") / "snap"
+    drv = PartitionDriver(graph12, CFG, snapshot_dir=snap_dir,
+                          snapshot_every=1, keep=100_000)
+    res = drv.run()
+    return drv, res, snap_dir
+
+
+# ---------------------------------------------------------------------------
+# driver == fire-and-forget jits
+# ---------------------------------------------------------------------------
+
+def test_driver_bit_identical_to_partition_spmd(graph12, snapped_run):
+    """Round stepping reuses the exact traced round function, so the
+    state machine is bit-identical to the whole-run while_loop."""
+    _, res, _ = snapped_run
+    ref = partition_spmd(graph12, CFG)
+    np.testing.assert_array_equal(res.edge_part, ref.edge_part)
+    np.testing.assert_array_equal(res.vparts, ref.vparts)
+    np.testing.assert_array_equal(res.edges_per_part, ref.edges_per_part)
+    assert res.rounds == ref.rounds
+    assert res.leftover == ref.leftover
+
+
+def test_driver_single_mode_matches_partition(graph12):
+    drv = PartitionDriver(graph12, CFG, mode="single")
+    res = drv.run()
+    ref = partition(graph12, CFG)
+    np.testing.assert_array_equal(res.edge_part, ref.edge_part)
+    np.testing.assert_array_equal(res.vparts, ref.vparts)
+    assert res.rounds == ref.rounds
+
+
+# ---------------------------------------------------------------------------
+# kill-at-round-k + resume bit-identity (ISSUE acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_resume_bit_identity(graph12, snapped_run):
+    """Resume from the round-k snapshot == uninterrupted run, bit for bit:
+    identical vparts, edge assignment, and replication factor."""
+    _, res, snap_dir = snapped_run
+    n = graph12.num_vertices
+    for k in (1, res.rounds // 2, res.rounds - 1):
+        drv = PartitionDriver.resume(graph12, CFG, snap_dir, round_k=k)
+        assert drv.rounds == k
+        got = drv.run()
+        np.testing.assert_array_equal(got.edge_part, res.edge_part)
+        np.testing.assert_array_equal(got.vparts, res.vparts)
+        st_got = evaluate(np.asarray(graph12.edges), got.edge_part, n,
+                          CFG.num_partitions)
+        st_ref = evaluate(np.asarray(graph12.edges), res.edge_part, n,
+                          CFG.num_partitions)
+        assert st_got.replication_factor == st_ref.replication_factor
+
+
+def test_resume_latest_snapshot(graph12, snapped_run):
+    """Default resume picks the newest snapshot — the post-kill path."""
+    _, res, snap_dir = snapped_run
+    drv = PartitionDriver.resume(graph12, CFG, snap_dir)
+    assert drv.rounds == res.rounds
+    got = drv.run()        # already at the fixed point: finalize only
+    np.testing.assert_array_equal(got.edge_part, res.edge_part)
+
+
+def test_resume_single_mode(tmp_path):
+    g = rmat(9, 8, seed=5)
+    cfg = NEConfig(num_partitions=4, seed=1, k_sel=32, edge_chunk=1 << 10)
+    full = PartitionDriver(g, cfg, mode="single", snapshot_dir=tmp_path,
+                           snapshot_every=2, keep=100_000).run()
+    drv = PartitionDriver.resume(g, cfg, tmp_path, mode="single")
+    assert drv.rounds > 0
+    got = drv.run()
+    np.testing.assert_array_equal(got.edge_part, full.edge_part)
+    np.testing.assert_array_equal(got.vparts, full.vparts)
+
+
+def test_resume_wrong_config_fails(graph12, snapped_run):
+    """A resume against a different NEConfig must fail loudly."""
+    _, _, snap_dir = snapped_run
+    other = NEConfig(num_partitions=8, seed=1, k_sel=64, edge_chunk=1 << 12)
+    with pytest.raises(SnapshotMismatch):
+        PartitionDriver.resume(graph12, other, snap_dir)
+
+
+def test_resume_wrong_graph_fails(snapped_run):
+    """A resume against a different edge source must fail loudly."""
+    _, _, snap_dir = snapped_run
+    other = rmat(SCALE, 8, seed=4)
+    with pytest.raises(SnapshotMismatch):
+        PartitionDriver.resume(other, CFG, snap_dir)
+
+
+def test_resume_wrong_mode_fails(graph12, snapped_run):
+    _, _, snap_dir = snapped_run
+    with pytest.raises(SnapshotMismatch):
+        PartitionDriver.resume(graph12, CFG, snap_dir, mode="single")
+
+
+def test_fingerprints_discriminate(graph12):
+    import dataclasses
+
+    assert config_fingerprint(CFG) == config_fingerprint(CFG)
+    assert config_fingerprint(CFG) != config_fingerprint(
+        dataclasses.replace(CFG, seed=7))
+    assert config_fingerprint(CFG) != config_fingerprint(
+        dataclasses.replace(CFG, alpha=1.2))
+    assert graph_fingerprint(graph12) == graph_fingerprint(graph12)
+    assert graph_fingerprint(graph12) != graph_fingerprint(
+        rmat(SCALE, 8, seed=4))
+
+
+# ---------------------------------------------------------------------------
+# artifact store
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip(graph12, snapped_run, tmp_path):
+    """partition → save_artifact → load_artifact → identical edge_part /
+    replica map (the PartitionResult serialization satellite)."""
+    drv, res, _ = snapped_run
+    art = drv.save_artifact(tmp_path / "art")
+    loaded = load_artifact(tmp_path / "art")
+    np.testing.assert_array_equal(loaded.edge_part, res.edge_part)
+    np.testing.assert_array_equal(loaded.vparts, res.vparts)
+    np.testing.assert_array_equal(loaded.edges_per_part, res.edges_per_part)
+    np.testing.assert_array_equal(loaded.edges, np.asarray(graph12.edges))
+    back = loaded.result()
+    np.testing.assert_array_equal(back.edge_part, res.edge_part)
+    assert back.rounds == res.rounds and back.leftover == res.leftover
+    # per-partition shards decode independently and agree with the whole
+    for p in (0, CFG.num_partitions - 1):
+        e_p = loaded.partition_edges(p)
+        np.testing.assert_array_equal(
+            e_p, np.asarray(graph12.edges)[res.edge_part == p])
+        assert e_p.shape[0] == int(res.edges_per_part[p])
+    # compression actually compresses (vs 8 B/edge raw + bitmap)
+    part_bytes = sum((loaded.dir / f"part_{p:05d}.bin").stat().st_size
+                     for p in range(CFG.num_partitions))
+    assert part_bytes < 8 * graph12.num_edges
+
+
+def test_artifact_feeds_gas_engine(graph12, snapped_run, tmp_path):
+    """The loaded artifact builds the identical vertex-cut engine structure
+    the in-memory result builds — no re-partitioning."""
+    from repro.apps.engine import build_sharded_graph
+
+    drv, res, _ = snapped_run
+    drv.save_artifact(tmp_path / "art")
+    loaded = load_artifact(tmp_path / "art")
+    sg_art = loaded.sharded_graph(CFG.num_partitions)
+    sg_ref = build_sharded_graph(np.asarray(graph12.edges), res.edge_part,
+                                 graph12.num_vertices, CFG.num_partitions)
+    for field in ("edges_ml", "emask", "mirror_glob", "mirror_mask",
+                  "send_idx", "send_mask", "recv_owned", "owned_glob",
+                  "owned_mask"):
+        np.testing.assert_array_equal(getattr(sg_art, field),
+                                      getattr(sg_ref, field))
+    assert sg_art.comm_slots == sg_ref.comm_slots
+
+
+def test_artifact_rejects_incomplete_assignment(tmp_path):
+    from repro.core.partitioner import PartitionResult
+
+    res = PartitionResult(np.array([0, -1], np.int32), np.zeros((3, 2), bool),
+                          np.array([1, 0], np.int32), 1, 0)
+    with pytest.raises(ValueError, match="complete assignment"):
+        save_artifact(tmp_path / "a", res,
+                      np.array([[0, 1], [1, 2]], np.int32), 3)
+
+
+def test_artifact_checksum_detects_corruption(graph12, snapped_run, tmp_path):
+    drv, _, _ = snapped_run
+    drv.save_artifact(tmp_path / "art")
+    loaded = load_artifact(tmp_path / "art")
+    path = loaded.dir / "part_00000.bin"
+    raw = bytearray(path.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="checksum"):
+        load_artifact(tmp_path / "art").partition_edges(0)
+
+
+# ---------------------------------------------------------------------------
+# multi-host ingestion
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def store_file(tmp_path_factory):
+    import repro.io as rio
+
+    td = tmp_path_factory.mktemp("store")
+    return rio.spill_canonical_rmat(td, 10, 8, seed=3, chunk_size=1 << 10)
+
+
+def test_host_block_ranges_tile_and_balance(store_file):
+    for hosts in (1, 2, 3, 7):
+        ranges = host_block_ranges(store_file, hosts)
+        assert len(ranges) == hosts
+        assert ranges[0][0] == 0 and ranges[-1][1] == store_file.num_blocks
+        for (a, b), (c, _) in zip(ranges, ranges[1:]):
+            assert b == c and a <= b
+        covered = sum(store_file.edges_in_blocks(a, b) for a, b in ranges)
+        assert covered == store_file.num_edges
+
+
+@pytest.mark.parametrize("hosts", [1, 2, 3])
+def test_ingest_matches_shard_edges_stream(store_file, hosts):
+    """Multi-host assembly is bit-identical to the sequential pass — the
+    partitioner cannot tell how many hosts fed it."""
+    ref = shard_edges_stream(store_file, 4, with_edges=True)
+    got = ingest_edgefile(store_file, 4, num_hosts=hosts, with_edges=True)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_cluster_importable_without_jax(store_file):
+    """The ingestion workers must stay lightweight: unpickling
+    ``cluster._ingest_worker`` in a spawn worker imports
+    ``repro.runtime.cluster`` through the package __init__, and that path
+    must not drag jax (or the driver) into every worker process."""
+    import subprocess
+    import sys
+
+    code = ("import sys; import repro.runtime.cluster; "
+            "assert 'jax' not in sys.modules, 'cluster import pulled jax'; "
+            "assert 'repro.runtime.driver' not in sys.modules")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+def test_ingest_process_pool(store_file):
+    ref = shard_edges_stream(store_file, 4)
+    got = ingest_edgefile(store_file, 4, num_hosts=2, processes=True)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_driver_from_store(store_file):
+    """The EdgeFile front door: ingest by host ranges, partition, and match
+    the fire-and-forget store path."""
+    cfg = NEConfig(num_partitions=4, seed=0, k_sel=64, edge_chunk=1 << 12)
+    res = PartitionDriver(store_file, cfg, num_hosts=2).run()
+    ref = partition_spmd(store_file, cfg)
+    np.testing.assert_array_equal(res.edge_part, ref.edge_part)
+    np.testing.assert_array_equal(res.vparts, ref.vparts)
+
+
+def test_edgefile_block_range_reads(store_file):
+    full = store_file.read_all()
+    a = store_file.read_blocks(0, 2)
+    b = store_file.read_blocks(2)
+    np.testing.assert_array_equal(np.concatenate([a, b]), full)
+    assert store_file.edges_in_blocks(0, 2) == a.shape[0]
+    assert store_file.edges_in_blocks() == store_file.num_edges
+    assert store_file.read_blocks(5, 5).shape == (0, 2)
+    assert list(store_file.iter_blocks(1, 1)) == []
+
+
+# ---------------------------------------------------------------------------
+# sharded checkpoint manager
+# ---------------------------------------------------------------------------
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    mgr = ShardedCheckpointManager(tmp_path, keep=2)
+    rep = {"counts": np.arange(8, dtype=np.int32)}
+    sharded = {"edge_part": np.arange(24, dtype=np.int32).reshape(4, 6)}
+    mgr.save(3, rep, sharded=sharded, extra_meta={"mode": "spmd"})
+    # per-shard files exist — the unit a multi-host deployment writes/reads
+    files = sorted(p.name for p in mgr._step_dir(3).iterdir())
+    assert [f for f in files if f.startswith("edge_part.shard")] == [
+        f"edge_part.shard{i:05d}.bin" for i in range(4)]
+    np.testing.assert_array_equal(mgr.load_shard(3, "edge_part", 2),
+                                  sharded["edge_part"][2])
+    np.testing.assert_array_equal(mgr.load_sharded(3, "edge_part"),
+                                  sharded["edge_part"])
+    assert mgr.meta(3) == {"mode": "spmd"}
+    assert mgr.shard_names(3) == ["edge_part"]
+
+
+def test_sharded_checkpoint_shard_corruption(tmp_path):
+    mgr = ShardedCheckpointManager(tmp_path)
+    mgr.save(1, {}, sharded={"x": np.ones((2, 3), np.float32)})
+    (mgr._step_dir(1) / "x.shard00001.bin").write_bytes(b"\0" * 12)
+    np.testing.assert_array_equal(mgr.load_shard(1, "x", 0), np.ones(3))
+    with pytest.raises(IOError, match="checksum"):
+        mgr.load_shard(1, "x", 1)
+
+
+def test_run_snapshot_skips_half_written(tmp_path, graph12):
+    """A torn newest snapshot falls back to the previous round; a valid
+    snapshot of the wrong run raises instead of falling back."""
+    snap = RunSnapshot(tmp_path, CFG, graph_fingerprint(graph12))
+    fields = {"edge_part": np.zeros((2, 4), np.int32),
+              "vparts": np.zeros((5, 8), bool),
+              "rounds": np.int32(1)}
+    snap.save_state(1, fields, "spmd")
+    fields["rounds"] = np.int32(2)
+    snap.save_state(2, fields, "spmd")
+    # tear round 2: truncate a shard file after publication
+    (snap.mgr._step_dir(2) / "edge_part.shard00001.bin").write_bytes(b"xy")
+    got, rnd, mode = snap.restore_state()
+    assert rnd == 1 and mode == "spmd"
+    np.testing.assert_array_equal(got["edge_part"], fields["edge_part"])

@@ -70,6 +70,102 @@ def test_checkpoint_corruption_fallback(tmp_path):
                                   np.arange(4.0))
 
 
+def test_checkpoint_kill_mid_save(tmp_path):
+    """SIGKILL the process in the middle of ``save``: the store must keep
+    the previous step fully restorable, never surface the torn one, and a
+    subsequent save of the same step must succeed (stale tmp cleanup)."""
+    import os
+    import signal
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.train import checkpoint as cp
+
+        mgr = cp.CheckpointManager({str(tmp_path)!r}, keep=5)
+        mgr.save(1, {{"w": np.arange(64.0)}})
+        orig = cp.CheckpointManager._write_data
+        def dying_write(self, tmp, flat, manifest):
+            orig(self, tmp, flat, manifest)
+            os.kill(os.getpid(), signal.SIGKILL)   # die before publish
+        cp.CheckpointManager._write_data = dying_write
+        mgr.save(2, {{"w": np.arange(64.0) * 2}})
+    """)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr[-2000:]
+    # the kill left a staging dir behind, but it is invisible to steps()
+    assert any(p.name.startswith(".tmp_step_")
+               for p in tmp_path.iterdir()), "expected a torn staging dir"
+    mgr = CheckpointManager(tmp_path, keep=5)
+    assert mgr.steps() == [1]
+    restored, step = mgr.restore({"w": jnp.zeros((64,))})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(64.0))
+    # retrying the interrupted step reclaims the stale tmp dir
+    mgr.save(2, {"w": jnp.arange(64.0) * 2})
+    assert mgr.steps() == [1, 2]
+    restored, step = mgr.restore({"w": jnp.zeros((64,))})
+    assert step == 2
+
+
+def test_checkpoint_overwrite_same_step(tmp_path):
+    """Re-saving an existing step swaps it atomically — the new data wins
+    and no staging/trash dirs are left behind."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(7, {"w": jnp.zeros((4,))})
+    mgr.save(7, {"w": jnp.ones((4,))})
+    restored, step = mgr.restore({"w": jnp.zeros((4,))})
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones(4))
+    assert mgr.steps() == [7]
+    assert not [p for p in tmp_path.iterdir() if p.name.startswith(".")]
+
+
+def test_checkpoint_trash_orphan_reclaimed(tmp_path):
+    """A .trash_step dir orphaned by a kill between the two swap renames
+    is reclaimed by the next save, whatever step it saves."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    (tmp_path / ".trash_step_0000000001").mkdir()
+    (tmp_path / ".trash_step_0000000001" / "data.bin").write_bytes(b"old")
+    mgr.save(2, {"w": jnp.ones((4,))})
+    assert not [p for p in tmp_path.iterdir()
+                if p.name.startswith(".trash_")]
+    assert mgr.steps() == [1, 2]
+
+
+def test_checkpoint_template_mismatch_raises(tmp_path):
+    """An intact checkpoint missing a template field is a structural
+    mismatch and must raise, not fall back to 'no restorable checkpoint'."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(KeyError, match="does not match"):
+        mgr.restore({"w": jnp.zeros((4,)), "extra": jnp.zeros(())})
+
+
+def test_checkpoint_truncated_data_falls_back(tmp_path):
+    """A torn data.bin (short write) must fall back to the previous step
+    instead of crashing the resume."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    tree = {"a": jnp.arange(8.0)}
+    mgr.save(1, tree)
+    mgr.save(2, jax.tree.map(lambda x: x + 1, tree))
+    data = mgr._step_dir(2) / "data.bin"
+    data.write_bytes(data.read_bytes()[:5])     # not even one element
+    restored, step = mgr.restore(tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+
+
 def test_checkpoint_elastic_reshard(tmp_path):
     """Restore onto explicit shardings (mesh-size change simulation)."""
     mgr = CheckpointManager(tmp_path)
