@@ -11,6 +11,12 @@ can afford to snapshot.  Rows:
                              a stepped-and-ready driver (ingest + restore)
   runtime/artifact_save      durable artifact write
   runtime/artifact_load      artifact load back to edge_part + replica map
+  runtime/multihost_round    2-process × 4-device steady-state round time
+                             (real jax.distributed collectives), vs the
+                             single-process round in `derived`
+  runtime/multihost_snap     per-round cost of the multi-writer snapshot
+                             publish protocol (2-process, snapshot_every=1
+                             minus snapshot_every=0)
 
 In ``--smoke`` mode this suite is also the CI resume drift gate: it
 asserts the resumed run reproduces the uninterrupted assignment bit for
@@ -19,15 +25,66 @@ runtime layer breaks the gate loudly.
 """
 from __future__ import annotations
 
+import json
+import subprocess
+import sys
 import tempfile
 import time
 from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import record
 
 from repro.core import NEConfig
 from repro.graphs.rmat import rmat
 from repro.runtime import PartitionDriver, load_artifact
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _multihost_run(td: Path, ef_path: str, name: str,
+                   snapshot_every: int) -> dict:
+    """One 2-process × 4-device launcher invocation; returns timing.json."""
+    out_dir = td / f"mh_{name}"
+    args = [sys.executable, str(ROOT / "scripts" / "launch_multihost.py"),
+            "--edgefile", ef_path, "--partitions", "8", "--seed", "0",
+            "--k-sel", "64", "--edge-chunk", str(1 << 12),
+            "--num-processes", "2", "--devices-per-process", "4",
+            "--snapshot-dir", str(td / f"snap_{name}"),
+            "--snapshot-every", str(snapshot_every),
+            "--out", str(out_dir), "--timeout", "900"]
+    proc = subprocess.run(args, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"multihost bench run failed "
+                           f"(rc={proc.returncode}):\n{proc.stderr[-3000:]}")
+    return json.loads((out_dir / "timing.json").read_text())
+
+
+def bench_multihost(single_round_us: float, fast: bool = False):
+    """2-process round latency + snapshot publish overhead rows.
+
+    Spawns the same launcher CI's multihost job uses, on a spilled
+    canonical store, so the row measures real ``jax.distributed``
+    collectives + the cooperative snapshot publish — not a rehearsal.
+    """
+    from repro.io.spill import spill_canonical_rmat
+
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        ef = spill_canonical_rmat(td / "graph", 9 if fast else 11, 8,
+                                  seed=3, chunk_size=1 << 12)
+        ef_path = str(ef.path)
+        ef.close()
+        plain = _multihost_run(td, ef_path, "plain", snapshot_every=0)
+        snap = _multihost_run(td, ef_path, "snap", snapshot_every=1)
+        t_plain = float(np.mean(plain["round_secs"][1:]))
+        t_snap = float(np.mean(snap["round_secs"][1:]))
+        record("runtime/multihost_round", t_plain * 1e6,
+               f"rounds={plain['rounds']};"
+               f"single_round_us={single_round_us:.1f}")
+        record("runtime/multihost_snap", (t_snap - t_plain) * 1e6,
+               f"+{(t_snap - t_plain) / max(t_plain, 1e-12) * 100:.0f}%")
 
 
 def main(fast: bool = False, smoke: bool = False):
@@ -92,6 +149,8 @@ def main(fast: bool = False, smoke: bool = False):
         assert ok_artifact, "artifact did not round-trip the assignment"
         if not smoke:
             assert (res_s.edge_part == res.edge_part).all()
+
+    bench_multihost(t_plain * 1e6, fast=fast)
 
 
 if __name__ == "__main__":

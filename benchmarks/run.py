@@ -1,14 +1,21 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--fast`` trims sizes for CI.
+Prints ``name,us_per_call,derived`` CSV.  ``--fast`` trims sizes for CI;
+``--smoke`` is the CI drift gate (tiny scales, asserting suites) and
+``--csv`` additionally writes the rows to a file so CI can upload them as
+a build artifact (the source for BENCH_*.json trajectories).
+
+Exit contract (the smoke gate depends on it): any suite that raises —
+including ``SystemExit`` from a ``sys.exit()`` deep in a suite — marks
+the run failed and the driver exits 1; an ``--only``/``--smoke``
+selection that matches *nothing* exits 2 instead of reporting success
+having run nothing.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
-
-from benchmarks.common import header
 
 
 SMOKE_SUITES = ("theory", "memory", "spmd", "runtime")  # tiny CI drift gate
@@ -20,6 +27,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale subset (CI gate: breaks on bench drift)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--csv", default=None,
+                    help="also write the result rows to this CSV file "
+                         "(written even when suites fail)")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -28,6 +38,7 @@ def main() -> None:
                             bench_lambda_sweep, bench_memory, bench_quality,
                             bench_roads, bench_runtime, bench_scaling,
                             bench_sequential, bench_spmd, bench_theory)
+    from benchmarks.common import ROWS, header
 
     suites = {
         "theory": lambda: bench_theory.main(),
@@ -46,18 +57,37 @@ def main() -> None:
         "roads": lambda: bench_roads.main(fast=args.fast),
         "kernels": lambda: bench_kernels.main(fast=args.fast),
     }
+    if args.only is not None and args.only not in suites:
+        print(f"unknown suite {args.only!r}; known: {sorted(suites)}",
+              file=sys.stderr)
+        raise SystemExit(2)
     header()
-    failed = []
+    failed, ran = [], []
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         if args.smoke and not args.only and name not in SMOKE_SUITES:
             continue
+        ran.append(name)
         try:
             fn()
-        except Exception:  # noqa: BLE001 — report all suites
+        except KeyboardInterrupt:
+            raise
+        # BaseException, not Exception: a suite calling sys.exit(0) (or a
+        # worker helper leaking SystemExit) must count as a failure, not
+        # terminate the driver with a success code mid-gate
+        except BaseException:  # noqa: BLE001 — report all suites
             failed.append(name)
             traceback.print_exc()
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for name, us, derived in ROWS:
+                f.write(f"{name},{us:.1f},{derived}\n")
+    if not ran:
+        print("no suites selected — selection bug, not success",
+              file=sys.stderr)
+        raise SystemExit(2)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

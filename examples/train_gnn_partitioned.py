@@ -14,7 +14,6 @@ os.environ.setdefault(
 
 import numpy as np      # noqa: E402
 import jax              # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.core import NEConfig, evaluate, partition  # noqa: E402
 from repro.apps.engine import build_sharded_graph  # noqa: E402

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Launch a multi-controller SPMD partitioning job on this machine.
+
+Parent mode (default) is a local stand-in for a cluster manager: it spawns
+``--num-processes`` copies of this script in ``--worker`` mode, each with
+its own forced host-device count and a shared ``jax.distributed``
+coordinator, then babysits them — the first worker to die takes the whole
+gang down (exit code of the first failure), because its peers are blocked
+in collectives whose counterpart is gone.
+
+Worker mode initializes ``jax.distributed``, ingests only this process's
+host block range of the canonical EdgeFile, and drives the round state
+machine with per-host snapshot writes; process 0 publishes ``result.npz``
+and ``timing.json`` under ``--out``.  See docs/DESIGN-multihost.md for the
+protocol and ``repro.runtime.multihost`` for the implementation.
+
+The exact invocation CI uses (2 processes x 4 devices):
+
+  PYTHONPATH=src python scripts/launch_multihost.py \\
+      --edgefile /tmp/graph/edges.canonical --partitions 8 \\
+      --num-processes 2 --devices-per-process 4 \\
+      --snapshot-dir /tmp/run/snapshots --snapshot-every 1 \\
+      --out /tmp/run/out
+
+Resume the same job after a crash by adding ``--resume`` (same snapshot
+dir; ingestion is re-derived, fingerprints verified, and all processes
+agree on the newest fully-published round before stepping).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    job = ap.add_argument_group("job")
+    job.add_argument(
+        "--edgefile",
+        required=True,
+        help="canonical EdgeFile to partition",
+    )
+    job.add_argument("--partitions", type=int, required=True)
+    job.add_argument("--alpha", type=float, default=1.1)
+    job.add_argument("--lam", type=float, default=0.1)
+    job.add_argument("--k-sel", type=int, default=256)
+    job.add_argument("--edge-chunk", type=int, default=1 << 18)
+    job.add_argument("--max-rounds", type=int, default=4096)
+    job.add_argument("--seed", type=int, default=0)
+    job.add_argument("--snapshot-dir", default=None)
+    job.add_argument("--snapshot-every", type=int, default=0)
+    job.add_argument("--keep", type=int, default=3)
+    job.add_argument(
+        "--exchange-dir",
+        default=None,
+        help="shared spill dir for the ingestion exchange "
+        "(default: <snapshot-dir>/exchange)",
+    )
+    job.add_argument(
+        "--resume",
+        action="store_true",
+        help="resume from the newest fully-published snapshot",
+    )
+    job.add_argument(
+        "--out",
+        default=None,
+        help="process 0 writes result.npz + timing.json here",
+    )
+
+    cl = ap.add_argument_group("cluster")
+    cl.add_argument("--num-processes", type=int, default=2)
+    cl.add_argument("--devices-per-process", type=int, default=4)
+    cl.add_argument(
+        "--coordinator",
+        default=None,
+        help="host:port of the jax.distributed coordinator "
+        "(parent mode picks a free local port)",
+    )
+    cl.add_argument(
+        "--log-dir",
+        default=None,
+        help="parent mode: one log file per worker (default: "
+        "stream worker output on failure only)",
+    )
+    cl.add_argument("--timeout", type=float, default=1800.0)
+
+    wk = ap.add_argument_group("worker (internal)")
+    wk.add_argument(
+        "--worker",
+        action="store_true",
+        help="run as one jax.distributed process (spawned by parent mode)",
+    )
+    wk.add_argument("--process-id", type=int, default=0)
+
+    fault = ap.add_argument_group("fault injection (integration tests)")
+    fault.add_argument(
+        "--die-round",
+        type=int,
+        default=-1,
+        help="crash --die-process at this round (-1: never)",
+    )
+    fault.add_argument(
+        "--die-stage",
+        default="after-round",
+        choices=["after-round", "after-shards", "after-publish"],
+        help="where in the round/snapshot protocol to die",
+    )
+    fault.add_argument("--die-process", type=int, default=1)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    ns = build_parser().parse_args(argv)
+    if ns.worker:
+        from repro.runtime.multihost import worker_main
+
+        return worker_main(ns)
+
+    from repro.runtime.multihost import launch_local
+
+    worker_argv = [sys.executable, os.path.abspath(__file__)]
+    worker_argv += sys.argv[1:] if argv is None else list(argv)
+    rc, outputs = launch_local(
+        worker_argv,
+        num_processes=ns.num_processes,
+        devices_per_process=ns.devices_per_process,
+        coordinator=ns.coordinator,
+        log_dir=ns.log_dir,
+        timeout=ns.timeout,
+    )
+    if rc != 0:
+        for i, out in enumerate(outputs):
+            tail = out[-3000:]
+            print(f"--- worker {i} (tail) ---\n{tail}", file=sys.stderr)
+        print(f"multihost job failed with exit code {rc}", file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -55,7 +55,6 @@ def dbh(g: Graph, p: int, seed: int = 0) -> np.ndarray:
 @partial(jax.jit, static_argnames=("p", "n", "lam_balance"))
 def _hdrf_scan(edges: Array, p: int, n: int, lam_balance: float = 1.0):
     """HDRF: score(p) = C_rep(p) + λ·C_bal(p); partial degrees θ."""
-    m = edges.shape[0]
 
     def step(carry, e):
         pdeg, vpart, sizes = carry       # (N,), (N,P) bool, (P,)

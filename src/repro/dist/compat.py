@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "set_mesh", "pvary"]
+__all__ = ["all_processes_min", "barrier", "make_mesh", "process_env",
+           "pvary", "set_mesh", "shard_map"]
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -59,6 +60,51 @@ def make_mesh(axis_shapes, axis_names, devices=None):
         except TypeError:
             pass
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def process_env() -> tuple[int, int]:
+    """(process index, process count) — (0, 1) outside ``jax.distributed``.
+
+    Failure-tolerant so call sites behave identically whether or not the
+    distributed runtime was ever initialized (single-controller runs, unit
+    tests, jax-free spawn workers that import this lazily).
+    """
+    try:
+        return int(jax.process_index()), int(jax.process_count())
+    except Exception:
+        return 0, 1
+
+
+def barrier(name: str) -> None:
+    """Cross-process sync point; a no-op in single-process runs.
+
+    Realized as ``multihost_utils.sync_global_devices`` — a psum over every
+    global device — so it doubles as a liveness check: if a peer process
+    died, the collective fails instead of silently proceeding on a torn
+    cluster.  ``name`` must be passed identically (and in the same order)
+    by every process.
+    """
+    if process_env()[1] == 1:
+        return
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(name)
+
+
+def all_processes_min(value: int) -> int:
+    """Minimum of a host-side int across all processes (identity locally).
+
+    Used by barrier'd resume to agree on the newest snapshot round that
+    *every* host can fully load — the 'last fully-published round wins'
+    half of the snapshot protocol.
+    """
+    if process_env()[1] == 1:
+        return int(value)
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    vals = multihost_utils.process_allgather(np.int64(value))
+    return int(np.min(vals))
 
 
 def set_mesh(mesh):

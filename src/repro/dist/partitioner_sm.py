@@ -305,6 +305,13 @@ def partition_spmd(g: Graph, cfg: NEConfig,
     Returns a host-side :class:`PartitionResult` matching the
     single-controller :func:`repro.core.partitioner.partition` API.
     """
+    if compat.process_env()[1] > 1:
+        raise RuntimeError(
+            "partition_spmd is single-controller: it assembles the full "
+            "shard layout in one process.  Multi-process jobs drive "
+            "spmd_round_step through repro.runtime.PartitionDriver "
+            "(scripts/launch_multihost.py), where each process ingests "
+            "only its own host block range.")
     d = num_devices or len(jax.devices())
     d = max(1, min(d, len(jax.devices())))
     n, m, edges, shards, masks, dev = _shard_input(g, d)

@@ -22,12 +22,19 @@ _EXPORTS = {
     "PartitionArtifact": "repro.runtime.artifact",
     "load_artifact": "repro.runtime.artifact",
     "save_artifact": "repro.runtime.artifact",
+    "exchange_assemble": "repro.runtime.cluster",
+    "exchange_counts": "repro.runtime.cluster",
+    "exchange_read_global": "repro.runtime.cluster",
+    "exchange_write_range": "repro.runtime.cluster",
     "host_block_ranges": "repro.runtime.cluster",
     "ingest_edgefile": "repro.runtime.cluster",
     "ingest_host_range": "repro.runtime.cluster",
     "my_block_range": "repro.runtime.cluster",
     "process_info": "repro.runtime.cluster",
     "PartitionDriver": "repro.runtime.driver",
+    "initialize_distributed": "repro.runtime.multihost",
+    "launch_local": "repro.runtime.multihost",
+    "worker_main": "repro.runtime.multihost",
     "RunSnapshot": "repro.runtime.snapshot",
     "ShardedCheckpointManager": "repro.runtime.snapshot",
     "SnapshotMismatch": "repro.runtime.snapshot",

@@ -36,6 +36,7 @@ sees.
 """
 from __future__ import annotations
 
+import json
 import multiprocessing
 import os
 from concurrent.futures import ProcessPoolExecutor
@@ -49,15 +50,15 @@ from repro.io.edgefile import EdgeFile
 def process_info() -> tuple[int, int]:
     """(host index, host count) under ``jax.distributed``; (0, 1) locally.
 
-    Import is lazy and failure-tolerant so the ingestion plan stays usable
-    from jax-free tooling (e.g. a pure-numpy repartitioning script).
+    Import is lazy so the ingestion plan stays usable from jax-free
+    tooling (e.g. a pure-numpy repartitioning script); the probe itself
+    is the single definition in ``repro.dist.compat.process_env``.
     """
     try:
-        import jax
-
-        return int(jax.process_index()), int(jax.process_count())
-    except Exception:
+        from repro.dist.compat import process_env
+    except ImportError:          # no jax installed at all
         return 0, 1
+    return process_env()
 
 
 def host_block_ranges(ef: EdgeFile, num_hosts: int) -> list[tuple[int, int]]:
@@ -121,6 +122,20 @@ def ingest_host_range(path: str | os.PathLike, start: int, stop: int,
     return rows, dev
 
 
+def range_flat_edges(rows: list[np.ndarray], dev: np.ndarray) -> np.ndarray:
+    """Reassemble a range's flat (k, 2) edge list from its per-device rows.
+
+    ``rows[d]`` holds the range's device-``d`` edges in file order, so a
+    scatter by assignment position restores the original order — the
+    load-bearing trick that keeps every ingestion path bit-identical to
+    the sequential ``shard_edges_stream`` pass.
+    """
+    flat = np.empty((dev.shape[0], 2), np.int32)
+    for d, r in enumerate(rows):
+        flat[np.flatnonzero(dev == d)] = r
+    return flat
+
+
 def _ingest_worker(args):
     return ingest_host_range(*args)
 
@@ -177,13 +192,7 @@ def ingest_edgefile(ef: EdgeFile, num_devices: int,
         k = dev.shape[0]
         dev_full[off:off + k] = dev
         if with_edges and k:
-            # reassemble this range's flat edge list from per-device rows:
-            # rows[d] holds the range's device-d edges in file order, so a
-            # scatter by assignment position restores the original order
-            flat = np.empty((k, 2), np.int32)
-            for d in range(num_devices):
-                flat[np.flatnonzero(dev == d)] = rows[d]
-            edges[off:off + k] = flat
+            edges[off:off + k] = range_flat_edges(rows, dev)
         off += k
         for d in range(num_devices):
             c = int(cursors[d])
@@ -195,5 +204,146 @@ def ingest_edgefile(ef: EdgeFile, num_devices: int,
     return shards, masks, cap, dev_full
 
 
-__all__ = ["host_block_ranges", "ingest_edgefile", "ingest_host_range",
-           "my_block_range", "process_info"]
+# ---------------------------------------------------------------------------
+# exchange-dir ingestion (true multi-controller: repro.runtime.multihost)
+# ---------------------------------------------------------------------------
+#
+# Under ``jax.distributed`` no process may ever hold the full shard layout,
+# but edges from host h's block range hash to *every* device, including ones
+# owned by other processes.  The exchange realizes the paper's
+# read-your-slice → shuffle-to-owners step through the shared store instead
+# of an in-memory all_to_all: host h streams only its range and spills one
+# raw file per destination device; after a barrier, host h assembles only
+# the shards of devices it owns by concatenating every host's contribution
+# *in host order* — which, because ranges tile the block index in order, is
+# bit-identical to the single-controller ``shard_edges_stream`` layout.
+# Peak memory per process: O(own range) during write, O(owned shards)
+# during assembly — never O(M).
+
+def _write_raw(path: str, arr: np.ndarray) -> None:
+    """Write raw bytes + fsync: the barrier publishes completeness, the
+    fsync makes sure completeness means bytes-on-disk."""
+    with open(path, "wb") as f:
+        f.write(np.ascontiguousarray(arr).tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _read_raw(path: str, dtype, shape) -> np.ndarray:
+    with open(path, "rb") as f:
+        return np.frombuffer(f.read(), dtype).reshape(shape)
+
+
+def exchange_write_range(exchange_dir: str | os.PathLike,
+                         ef_path: str | os.PathLike, host: int,
+                         num_hosts: int, num_devices: int,
+                         salt: int = 0) -> np.ndarray:
+    """Stage 1 of multi-controller ingestion: stream *only this host's*
+    block range, hash each edge to its owning device, and spill per-device
+    row files plus the range's flat edges / device assignment / partial
+    degree into ``exchange_dir``.  Returns this range's per-device counts.
+
+    Idempotent: a resumed run rewrites the same deterministic bytes.
+    """
+    exchange_dir = os.fspath(exchange_dir)
+    os.makedirs(exchange_dir, exist_ok=True)
+    with EdgeFile(ef_path) as ef:
+        n = int(ef.num_vertices)
+        if n > (1 << 31):
+            raise ValueError("shard arrays are int32 — vertex ids >= 2^31 "
+                             "would wrap silently")
+        start, stop = host_block_ranges(ef, num_hosts)[host]
+    rows, dev = ingest_host_range(ef_path, start, stop, num_devices, salt)
+    k = int(dev.shape[0])
+    for d in range(num_devices):
+        _write_raw(os.path.join(exchange_dir, f"h{host:03d}_d{d:03d}.rows"),
+                   rows[d])
+    flat = range_flat_edges(rows, dev)
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, flat[:, 0], 1)
+    np.add.at(deg, flat[:, 1], 1)
+    _write_raw(os.path.join(exchange_dir, f"h{host:03d}.edges"), flat)
+    _write_raw(os.path.join(exchange_dir, f"h{host:03d}.dev"), dev)
+    _write_raw(os.path.join(exchange_dir, f"h{host:03d}.deg"), deg)
+    counts = np.array([r.shape[0] for r in rows], np.int64)
+    marker = os.path.join(exchange_dir, f"h{host:03d}.json")
+    with open(marker, "w") as f:
+        f.write(json.dumps({"host": host, "edges": k, "num_vertices": n,
+                            "counts": counts.tolist()}))
+        f.flush()
+        os.fsync(f.fileno())
+    return counts
+
+
+def exchange_counts(exchange_dir: str | os.PathLike,
+                    num_hosts: int) -> np.ndarray:
+    """(H, D) per-host per-device contribution counts from the markers."""
+    exchange_dir = os.fspath(exchange_dir)
+    out = []
+    for h in range(num_hosts):
+        with open(os.path.join(exchange_dir, f"h{h:03d}.json")) as f:
+            out.append(json.loads(f.read())["counts"])
+    return np.asarray(out, np.int64)
+
+
+def exchange_assemble(exchange_dir: str | os.PathLike, num_hosts: int,
+                      num_devices: int, owned: list[int],
+                      ) -> tuple[dict, dict, int, np.ndarray]:
+    """Stage 2 (after the cross-process barrier): assemble only the shards
+    of the ``owned`` devices from every host's spilled contributions, in
+    host order.  Returns ``(shards, masks, cap, degree)`` where
+    ``shards[d]`` is the padded (cap, 2) int32 shard of owned device ``d``,
+    ``masks[d]`` its validity mask, ``cap`` the *global* shard capacity
+    (max total per-device count — identical to ``shard_edges_stream``), and
+    ``degree`` the global (N,) int64 degree (sum of per-host partials).
+    """
+    exchange_dir = os.fspath(exchange_dir)
+    per_host = exchange_counts(exchange_dir, num_hosts)        # (H, D)
+    totals = per_host.sum(axis=0)                              # (D,)
+    cap = int(totals.max()) if int(totals.sum()) else 1
+    shards: dict[int, np.ndarray] = {}
+    masks: dict[int, np.ndarray] = {}
+    for d in owned:
+        shard = np.zeros((cap, 2), np.int32)
+        mask = np.zeros((cap,), bool)
+        c = 0
+        for h in range(num_hosts):
+            kh = int(per_host[h, d])
+            shard[c:c + kh] = _read_raw(
+                os.path.join(exchange_dir, f"h{h:03d}_d{d:03d}.rows"),
+                np.int32, (kh, 2))
+            mask[c:c + kh] = True
+            c += kh
+        shards[d] = shard
+        masks[d] = mask
+    with open(os.path.join(exchange_dir, "h000.json")) as f:
+        n = json.loads(f.read())["num_vertices"]
+    degree = np.zeros(n, np.int64)
+    for h in range(num_hosts):
+        degree += _read_raw(os.path.join(exchange_dir, f"h{h:03d}.deg"),
+                            np.int64, (n,))
+    return shards, masks, cap, degree
+
+
+def exchange_read_global(exchange_dir: str | os.PathLike, num_hosts: int,
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """The flat (M, 2) edge list + (M,) per-edge device assignment, in file
+    order (host ranges concatenated in host order).  Only the finalize
+    epilogue calls this — the round loop never holds O(M) state."""
+    exchange_dir = os.fspath(exchange_dir)
+    per_host = exchange_counts(exchange_dir, num_hosts)
+    edges, dev = [], []
+    for h in range(num_hosts):
+        kh = int(per_host[h].sum())
+        edges.append(_read_raw(os.path.join(exchange_dir, f"h{h:03d}.edges"),
+                               np.int32, (kh, 2)))
+        dev.append(_read_raw(os.path.join(exchange_dir, f"h{h:03d}.dev"),
+                             np.int32, (kh,)))
+    return (np.concatenate(edges) if edges else np.zeros((0, 2), np.int32),
+            np.concatenate(dev) if dev else np.zeros((0,), np.int32))
+
+
+__all__ = ["exchange_assemble", "exchange_counts", "exchange_read_global",
+           "exchange_write_range", "host_block_ranges", "ingest_edgefile",
+           "ingest_host_range", "my_block_range", "process_info",
+           "range_flat_edges"]

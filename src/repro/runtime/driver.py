@@ -16,9 +16,11 @@ presume:
 * **ingestion** — a Graph shards in memory; a canonical EdgeFile shards
   through :mod:`repro.runtime.cluster` host block ranges, each range
   streamed and hashed independently (optionally in worker processes).
-  The driver itself is single-controller — it assembles the full shard
-  layout the shard_map program needs; per-process execution over the same
-  plan is the ROADMAP follow-up;
+  Under ``jax.distributed`` (``jax.process_count() > 1``) the driver goes
+  truly multi-controller: each process ingests only its own block range
+  through the cluster exchange, assembles only the shards of the devices
+  it owns, and the round state lives in global ``jax.Array``\\ s spanning
+  all processes (see :mod:`repro.runtime.multihost`);
 * **snapshots** — every ``snapshot_every`` rounds the round state goes
   through :class:`repro.runtime.snapshot.RunSnapshot` (sharded files,
   fsync + atomic rename, config/graph fingerprints).  Resume against the
@@ -46,6 +48,7 @@ from repro.dist.partitioner_sm import (AXIS, SpmdState, spmd_done,
                                        stitch_edge_part)
 from repro.io.edgefile import EdgeFile
 from repro.io.stream import require_canonical
+from repro.launch.mesh import make_edge_mesh
 from repro.runtime import cluster
 from repro.runtime.artifact import PartitionArtifact, save_artifact
 from repro.runtime.snapshot import (RunSnapshot, SnapshotMismatch,
@@ -65,7 +68,8 @@ class PartitionDriver:
     def __init__(self, source, cfg: NEConfig, num_devices: int | None = None,
                  mode: str = "spmd", snapshot_dir: str | os.PathLike | None = None,
                  snapshot_every: int = 0, keep: int = 3,
-                 num_hosts: int | None = None, ingest_processes: bool = False):
+                 num_hosts: int | None = None, ingest_processes: bool = False,
+                 exchange_dir: str | os.PathLike | None = None):
         if mode not in ("spmd", "single"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
@@ -73,7 +77,17 @@ class PartitionDriver:
         self.snapshot_every = int(snapshot_every)
         self._result: PartitionResult | None = None
         self._done: bool | None = None
+        self._host, self._nprocs = compat.process_env()
+        self.multihost = self.mode == "spmd" and self._nprocs > 1
+        # test-only crash-injection point for the multi-writer snapshot
+        # protocol (see RunSnapshot.save_state_multihost / the kill-at-
+        # round-k integration checks); never set in production runs
+        self.snapshot_fault_hook = None
 
+        if mode == "single" and self._nprocs > 1:
+            raise ValueError("mode='single' is single-controller by "
+                             "definition — multi-process runs drive the "
+                             "SPMD partitioner (mode='spmd')")
         if mode == "single":
             g = source if isinstance(source, EdgeFile) else as_graph(source)
             self._graph_fp = graph_fingerprint(g)
@@ -85,6 +99,9 @@ class PartitionDriver:
             self.limit = alpha_limit(self.cfg.alpha, self.m,
                                      self.cfg.num_partitions)
             self.state: NEState | SpmdState = ne_init_state(g, self.cfg)
+        elif self.multihost:
+            self._init_multihost(source, cfg, num_devices, snapshot_dir,
+                                 exchange_dir)
         else:
             self._graph_fp = graph_fingerprint(source)
             d = num_devices or len(jax.devices())
@@ -95,7 +112,7 @@ class PartitionDriver:
             self.cfg = cfg.clamped(self.n)
             self.limit = alpha_limit(self.cfg.alpha, self.m,
                                      self.cfg.num_partitions)
-            self.mesh = compat.make_mesh((self.num_devices,), (AXIS,))
+            self.mesh = make_edge_mesh(self.num_devices, axis=AXIS)
             self._u_sh = jnp.asarray(shards[:, :, 0])
             self._v_sh = jnp.asarray(shards[:, :, 1])
             self._mask_sh = jnp.asarray(masks)
@@ -104,6 +121,66 @@ class PartitionDriver:
         self.snapshot = (RunSnapshot(snapshot_dir, self.cfg, self._graph_fp,
                                      keep=keep)
                         if snapshot_dir is not None else None)
+
+    def _init_multihost(self, source, cfg: NEConfig,
+                        num_devices: int | None, snapshot_dir, exchange_dir):
+        """True multi-controller construction (``jax.process_count() > 1``).
+
+        Each process streams only its own host block range into the
+        cluster exchange, assembles only the shards of the devices it
+        owns, and the round state is built as global ``jax.Array``\\ s
+        over the all-process mesh.  The full edge list / device map are
+        *not* materialized here — the finalize epilogue loads them lazily
+        from the exchange.
+        """
+        from repro.runtime import multihost as mh
+
+        if not isinstance(source, EdgeFile):
+            raise TypeError(
+                "multi-controller runs partition a canonical EdgeFile — "
+                "every process must ingest its own block range, got "
+                f"{type(source).__name__}")
+        require_canonical(source)
+        self._graph_fp = graph_fingerprint(source)
+        if num_devices not in (None, len(jax.devices())):
+            raise ValueError(
+                f"num_devices={num_devices} under jax.distributed — the "
+                f"mesh always spans all {len(jax.devices())} global "
+                f"devices (one shard per device)")
+        self.num_devices = len(jax.devices())
+        if exchange_dir is None and snapshot_dir is not None:
+            exchange_dir = os.path.join(os.fspath(snapshot_dir), "exchange")
+        if exchange_dir is None:
+            raise ValueError("multi-controller ingestion needs an "
+                             "exchange_dir (or a snapshot_dir to derive "
+                             "it from)")
+        self._exchange_dir = os.fspath(exchange_dir)
+        self.n, self.m = int(source.num_vertices), int(source.num_edges)
+        self.cfg = cfg.clamped(self.n)
+        self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                 self.cfg.num_partitions)
+        self.mesh = make_edge_mesh(self.num_devices, axis=AXIS)
+        self._owned = mh.owned_indices(self.mesh)
+        cluster.exchange_write_range(self._exchange_dir, source.path,
+                                     self._host, self._nprocs,
+                                     self.num_devices)
+        compat.barrier("ingest-exchange")
+        shards, masks, cap, degree = cluster.exchange_assemble(
+            self._exchange_dir, self._nprocs, self.num_devices, self._owned)
+        self._u_sh = mh.global_shard_array(
+            self.mesh, {d: shards[d][:, 0] for d in self._owned},
+            (cap,), np.int32)
+        self._v_sh = mh.global_shard_array(
+            self.mesh, {d: shards[d][:, 1] for d in self._owned},
+            (cap,), np.int32)
+        self._mask_sh = mh.global_shard_array(
+            self.mesh, {d: masks[d] for d in self._owned}, (cap,), bool)
+        self.state = mh.spmd_init_state_global(
+            self.mesh, cap, self.n, self.cfg, degree, self.m, self._owned)
+        # loaded lazily by finalize() from the exchange — the round loop
+        # never holds O(M) host state in a multi-controller run
+        self._edges = None
+        self._dev = None
 
     @staticmethod
     def _ingest(source, num_devices: int, num_hosts: int | None,
@@ -185,8 +262,16 @@ class PartitionDriver:
         if self.mode == "single":
             edge_part = self.state.edge_part
         else:
-            edge_part = stitch_edge_part(np.asarray(self.state.edge_part),
-                                         self._dev, self.m)
+            if self.multihost:
+                from repro.runtime import multihost as mh
+
+                ep_sh = mh.gather_to_host(self.mesh, self.state.edge_part)
+                if self._dev is None:
+                    self._edges, self._dev = cluster.exchange_read_global(
+                        self._exchange_dir, self._nprocs)
+            else:
+                ep_sh = np.asarray(self.state.edge_part)
+            edge_part = stitch_edge_part(ep_sh, self._dev, self.m)
         self._result = finalize_result(edge_part, self.state.vparts,
                                        self.state.edges_per_part,
                                        self._edges, self.cfg, self.rounds)
@@ -195,16 +280,44 @@ class PartitionDriver:
     # -- snapshots ----------------------------------------------------------
 
     def save_snapshot(self):
-        """Persist the current round state (crash-safe, fingerprinted)."""
+        """Persist the current round state (crash-safe, fingerprinted).
+
+        Multi-controller runs go through the cooperative multi-writer
+        protocol: this process writes only the ``edge_part`` slices of the
+        devices it owns, process 0 stages the replicated fields and
+        publishes the round atomically once every host's slices are
+        durably staged (see ``RunSnapshot.save_state_multihost``).
+        """
         if self.snapshot is None:
             raise RuntimeError("driver was built without a snapshot_dir")
+        if self.multihost:
+            slices = {}
+            for sh in self.state.edge_part.addressable_shards:
+                i = sh.index[0].start or 0
+                slices[int(i)] = np.asarray(sh.data)[0]
+            fields = {k: np.asarray(v)
+                      for k, v in self.state._asdict().items()
+                      if k != "edge_part"}
+            return self.snapshot.save_state_multihost(
+                self.rounds, fields, self.mode, self._host,
+                {"edge_part": slices}, {"edge_part": self.num_devices},
+                compat.barrier, fault_hook=self.snapshot_fault_hook)
         fields = {k: np.asarray(v) for k, v in self.state._asdict().items()}
         return self.snapshot.save_state(self.rounds, fields, self.mode)
 
     def restore_snapshot(self, round_k: int | None = None) -> int:
-        """Load round state from the snapshot store (latest by default)."""
+        """Load round state from the snapshot store (latest by default).
+
+        Multi-controller resume is barrier'd: each process loads only its
+        own ``edge_part`` slices of the newest round it can fully read,
+        the processes agree on the minimum such round (so one host's torn
+        shard rolls everyone back together), rebuild the global state, and
+        synchronize before the first step.
+        """
         if self.snapshot is None:
             raise RuntimeError("driver was built without a snapshot_dir")
+        if self.multihost:
+            return self._restore_multihost(round_k)
         fields, rnd, mode = self.snapshot.restore_state(round_k)
         if mode != self.mode:
             raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "
@@ -224,6 +337,44 @@ class PartitionDriver:
         self.state = cls(**{k: jnp.asarray(fields[k]) for k in want})
         self._result = None
         self._done = None
+        return rnd
+
+    def _restore_multihost(self, round_k: int | None) -> int:
+        from repro.runtime import multihost as mh
+
+        fields, rnd, mode, counts = \
+            self.snapshot.restore_state_multihost(self._owned, round_k)
+        if round_k is None:
+            agreed = compat.all_processes_min(rnd)
+            if agreed != rnd:
+                fields, rnd, mode, counts = \
+                    self.snapshot.restore_state_multihost(self._owned,
+                                                          round_k=agreed)
+        if mode != self.mode:
+            raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "
+                                   f"driver is {self.mode!r}")
+        missing = set(SpmdState._fields) - set(fields)
+        if missing:
+            raise SnapshotMismatch(f"snapshot is missing fields {missing}")
+        cap = int(self._mask_sh.shape[1])
+        if counts.get("edge_part") != self.num_devices:
+            raise SnapshotMismatch(
+                f"snapshot edge_part has {counts.get('edge_part')} shards, "
+                f"mesh has {self.num_devices} devices — resume needs the "
+                f"same device count")
+        for i, arr in fields["edge_part"].items():
+            if tuple(arr.shape) != (cap,):
+                raise SnapshotMismatch(
+                    f"snapshot edge_part shard {i} has shape {arr.shape} "
+                    f"!= current capacity ({cap},)")
+        edge_part = mh.global_shard_array(self.mesh, fields["edge_part"],
+                                          (cap,), np.int32)
+        rep = {k: mh.replicate(self.mesh, fields[k])
+               for k in SpmdState._fields if k != "edge_part"}
+        self.state = SpmdState(edge_part=edge_part, **rep)
+        self._result = None
+        self._done = None
+        compat.barrier(f"resume-{rnd}")
         return rnd
 
     @classmethod

@@ -140,6 +140,107 @@ class ShardedCheckpointManager(CheckpointManager):
         manifest = json.loads((d / "manifest.json").read_text())
         return sorted(manifest.get("shards", {}))
 
+    def shard_count(self, step: int, name: str) -> int:
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        return len(manifest["shards"][name])
+
+    # -- multi-writer protocol (one jax process per host) -------------------
+    #
+    # ``save`` above is single-writer: one process stages everything and
+    # publishes atomically.  Under ``jax.distributed`` each host must write
+    # only its own shard slices, so a step is staged cooperatively:
+    #
+    #   host 0:      begin_shared   — tmp dir, replicated fields, partial
+    #                                 manifest (fsynced)
+    #   <barrier>                     (tmp dir exists everywhere)
+    #   every host:  write_host_shards — own slice files + per-host manifest
+    #   <barrier>                     (all slices durably staged)
+    #   host 0:      publish_shared — merge per-host manifests, atomic rename
+    #
+    # The caller owns the barriers (they need the live distributed context);
+    # see ``RunSnapshot.save_state_multihost``.  A kill at any point before
+    # publish leaves only a dot-prefixed tmp dir, which ``steps()`` never
+    # lists and the next save of that step reclaims — so the last *fully
+    # published* step always wins, and torn per-host staging is skipped by
+    # construction.  The published layout is byte-compatible with the
+    # single-writer ``save``, so a snapshot taken by a 2-process run can be
+    # restored by a single-process driver and vice versa.
+
+    def shared_tmp(self, step: int) -> Path:
+        return self.dir / f".tmp_step_{step:010d}"
+
+    def begin_shared(self, step: int, tree,
+                     extra_meta: dict | None = None) -> Path:
+        """Writer-0 half of a cooperative save: stage the replicated fields
+        and the partial manifest in the shared tmp dir."""
+        import jax
+
+        from repro.train.checkpoint import _flatten
+
+        tmp, manifest = self._begin(step, extra_meta)
+        self._write_data(tmp, _flatten(jax.device_get(tree)), manifest)
+        with open(tmp / ".manifest.partial.json", "w") as f:
+            f.write(json.dumps(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        return tmp
+
+    def write_host_shards(self, step: int, host: int,
+                          shards: dict[str, dict[int, np.ndarray]]) -> None:
+        """Any host: write only its own shard slices + a per-host manifest.
+
+        ``shards[name][i]`` is the slice this host owns for global shard
+        index ``i`` (already squeezed of the leading device axis).
+        """
+        tmp = self.shared_tmp(step)
+        entries: dict[str, dict[str, dict]] = {}
+        for name, by_index in shards.items():
+            entries[name] = {}
+            for i, arr in sorted(by_index.items()):
+                a = np.ascontiguousarray(np.asarray(arr))
+                raw = a.tobytes()
+                with open(tmp / f"{name}.shard{i:05d}.bin", "wb") as f:
+                    f.write(raw)
+                    f.flush()
+                    os.fsync(f.fileno())
+                entries[name][str(i)] = {
+                    "dtype": str(a.dtype), "shape": list(a.shape),
+                    "sha1": hashlib.sha1(raw).hexdigest()[:16],
+                }
+        with open(tmp / f".host{host:03d}.json", "w") as f:
+            f.write(json.dumps(entries))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def publish_shared(self, step: int,
+                       num_shards: dict[str, int]) -> Path:
+        """Writer-0, after every host staged: merge the per-host manifests
+        into the step manifest and publish atomically.  ``num_shards`` maps
+        each sharded name to its expected global shard count — a missing
+        slice (a host that lied about reaching the barrier) fails loudly
+        instead of publishing a torn step."""
+        tmp = self.shared_tmp(step)
+        manifest = json.loads((tmp / ".manifest.partial.json").read_text())
+        merged: dict[str, list] = {name: [None] * count
+                                   for name, count in num_shards.items()}
+        host_files = sorted(tmp.glob(".host*.json"))
+        for hp in host_files:
+            for name, by_index in json.loads(hp.read_text()).items():
+                for i, meta in by_index.items():
+                    merged[name][int(i)] = meta
+        for name, ents in merged.items():
+            missing = [i for i, e in enumerate(ents) if e is None]
+            if missing:
+                raise IOError(f"multi-writer step {step}: no host staged "
+                              f"{name} shards {missing} — refusing to "
+                              f"publish a torn step")
+        manifest["shards"] = merged
+        (tmp / ".manifest.partial.json").unlink()
+        for hp in host_files:
+            hp.unlink()
+        return self._publish(step, tmp, manifest)
+
 
 # ---------------------------------------------------------------------------
 # partitioner-run façade
@@ -174,6 +275,84 @@ class RunSnapshot:
                 "graph_fingerprint": self.graph_fp}
         return self.mgr.save(round_k, fields, sharded=sharded,
                              extra_meta=meta)
+
+    def save_state_multihost(self, round_k: int, fields: dict, mode: str,
+                             host: int, shard_slices: dict,
+                             num_shards: dict, barrier,
+                             fault_hook=None) -> Path | None:
+        """Cooperative multi-writer save_state: host ``h`` writes only its
+        own shard slices; host 0 stages the replicated ``fields`` and
+        publishes after everyone staged.
+
+        ``shard_slices`` maps sharded names to ``{global_index: slice}``
+        for the indices this host owns; ``num_shards`` maps them to their
+        global shard counts.  ``barrier(name)`` is the caller's
+        cross-process sync (``repro.dist.compat.barrier``).  ``fault_hook``
+        is a test-only crash-injection point called as
+        ``fault_hook(stage, round_k)`` at each protocol stage.
+        """
+        fields = {k: np.asarray(v) for k, v in fields.items()}
+        meta = {"mode": mode, "round": int(round_k),
+                "config_fingerprint": self.cfg_fp,
+                "graph_fingerprint": self.graph_fp}
+        if host == 0:
+            self.mgr.begin_shared(round_k, fields, extra_meta=meta)
+        barrier(f"snap-begin-{round_k}")
+        self.mgr.write_host_shards(round_k, host, shard_slices)
+        if fault_hook is not None:
+            fault_hook("after-shards", round_k)
+        barrier(f"snap-shards-{round_k}")
+        path = None
+        if host == 0:
+            path = self.mgr.publish_shared(round_k, num_shards)
+        # the publish barrier precedes the fault hook so that "after-publish"
+        # is true on *every* host — a non-publishing host reaching the hook
+        # must not race writer-0's atomic rename
+        barrier(f"snap-publish-{round_k}")
+        if fault_hook is not None:
+            fault_hook("after-publish", round_k)
+        return path
+
+    def restore_state_multihost(self, owned: list[int],
+                                round_k: int | None = None,
+                                ) -> tuple[dict, int, str, dict]:
+        """Like :meth:`restore_state`, but loads only the ``owned`` slices
+        of each sharded array: sharded names map to ``{index: array}``
+        instead of the stacked (D, …) array.  Also returns the global shard
+        counts so the caller can validate the device layout.  Torn steps
+        (unpublished staging, checksum mismatch) fall back to the previous
+        published round, exactly as in the single-process path."""
+        candidates = ([round_k] if round_k is not None
+                      else list(reversed(self.mgr.steps())))
+        last_err: Exception | None = None
+        for step in candidates:
+            try:
+                meta = self.mgr.meta(step)
+                self._check(meta)
+                fields = dict(self.mgr._load_flat(step))
+                counts = {}
+                for name in self.mgr.shard_names(step):
+                    counts[name] = self.mgr.shard_count(step, name)
+                    bad = [i for i in owned if i >= counts[name]]
+                    if bad:
+                        # a config problem, not corruption: falling back
+                        # (or a raw IndexError escaping mid-collective)
+                        # must not mask a device-count change
+                        raise SnapshotMismatch(
+                            f"snapshot {name} has {counts[name]} shards; "
+                            f"this process owns indices {bad} — resume "
+                            f"needs the same device count")
+                    fields[name] = {i: self.mgr.load_shard(step, name, i)
+                                    for i in owned}
+            except SnapshotMismatch:
+                raise
+            except (IOError, json.JSONDecodeError, ValueError, KeyError) as e:
+                last_err = e          # torn per-host shard → previous round
+                continue
+            return fields, int(meta["round"]), meta["mode"], counts
+        raise FileNotFoundError(
+            f"no restorable snapshot in {self.mgr.dir}"
+            + (f" (last error: {last_err})" if last_err else ""))
 
     def rounds(self) -> list[int]:
         return self.mgr.steps()

@@ -1,0 +1,233 @@
+"""Multi-controller integration checks: 2 real processes x 4 devices each.
+
+Drives ``scripts/launch_multihost.py`` (the exact entrypoint CI documents)
+through the full failure matrix against a single-process 8-device
+reference computed in this interpreter:
+
+  A. uninterrupted 2-process run        -> bit-identical to partition_spmd
+  B. kill worker 1 after the round-k snapshot published (job dies)
+  C. resume B                           -> bit-identical, from round k
+  D. kill worker 1 mid-save (shards staged, never published)
+  E. resume D                           -> bit-identical, from round k-1
+                                           (the torn round is skipped)
+  F. single-process driver resumes A's 2-process snapshots (cross
+     process-count restore compatibility)
+
+Prints one ``RESULT {json}`` line and exits nonzero if any bit-identity
+or protocol check fails, so it gates CI when run directly; the pytest
+wrapper (tests/test_multihost.py, ``-m multihost``) asserts the same
+fields for local runs.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[2]
+SCRIPT = ROOT / "scripts" / "launch_multihost.py"
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+
+from repro.core import NEConfig  # noqa: E402
+from repro.dist.partitioner_sm import partition_spmd  # noqa: E402
+from repro.io.spill import spill_canonical_rmat  # noqa: E402
+from repro.runtime import PartitionDriver  # noqa: E402
+
+SCALE, EDGE_FACTOR = 10, 8
+CFG = NEConfig(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
+
+out = {"devices": len(jax.devices())}
+
+
+def launch(td, name, extra, expect_fail=False):
+    """One parent invocation of the launcher; returns (rc, out_dir)."""
+    out_dir = td / f"out_{name}"
+    args = [
+        sys.executable,
+        str(SCRIPT),
+        "--edgefile",
+        str(td / "graph" / "canonical.edges"),
+        "--partitions",
+        "8",
+        "--seed",
+        "0",
+        "--k-sel",
+        "64",
+        "--edge-chunk",
+        str(1 << 12),
+        "--num-processes",
+        "2",
+        "--devices-per-process",
+        "4",
+        "--keep",
+        "100000",
+        "--log-dir",
+        str(td / f"logs_{name}"),
+        "--timeout",
+        "900",
+        *extra,
+    ]
+    if not expect_fail:
+        args += ["--out", str(out_dir)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        args, capture_output=True, text=True, timeout=1200, env=env
+    )
+    if not expect_fail and proc.returncode != 0:
+        print(proc.stdout[-4000:], file=sys.stderr)
+        print(proc.stderr[-4000:], file=sys.stderr)
+        raise RuntimeError(f"run {name} failed rc={proc.returncode}")
+    return proc.returncode, out_dir
+
+
+def load(out_dir):
+    res = np.load(out_dir / "result.npz")
+    timing = json.loads((out_dir / "timing.json").read_text())
+    return res, timing
+
+
+def identical(res, ref):
+    return bool(
+        (res["edge_part"] == np.asarray(ref.edge_part)).all()
+        and (res["vparts"] == np.asarray(ref.vparts)).all()
+        and int(res["rounds"]) == int(ref.rounds)
+    )
+
+
+with tempfile.TemporaryDirectory() as _td:
+    td = Path(_td)
+    ef = spill_canonical_rmat(
+        td / "graph", SCALE, EDGE_FACTOR, seed=3, chunk_size=1 << 12
+    )
+    out["num_edges"] = int(ef.num_edges)
+
+    # single-process 8-device reference, same canonical EdgeFile
+    ref = partition_spmd(ef, CFG)
+    out["ref_rounds"] = int(ref.rounds)
+    k = max(int(ref.rounds) // 2, 1)
+    out["kill_round"] = k
+
+    # A: uninterrupted 2-process run
+    _, out_a = launch(
+        td,
+        "A",
+        ["--snapshot-dir", str(td / "snapA"), "--snapshot-every", "1"],
+    )
+    res_a, timing_a = load(out_a)
+    out["multihost_matches_spmd"] = identical(res_a, ref)
+    out["multihost_rounds"] = int(res_a["rounds"])
+    out["round_secs_mean"] = float(np.mean(timing_a["round_secs"][1:]))
+
+    # B: worker 1 dies right after the round-k snapshot publishes
+    rc_b, _ = launch(
+        td,
+        "B",
+        [
+            "--snapshot-dir",
+            str(td / "snapB"),
+            "--snapshot-every",
+            "1",
+            "--die-round",
+            str(k),
+            "--die-stage",
+            "after-publish",
+            "--die-process",
+            "1",
+        ],
+        expect_fail=True,
+    )
+    out["kill_job_failed"] = rc_b != 0
+    published_b = sorted(p.name for p in (td / "snapB").glob("step_*"))
+    out["kill_last_published"] = (
+        int(published_b[-1].split("_")[1]) if published_b else 0
+    )
+
+    # C: resume B — must replay rounds k+1..end bit-identically
+    _, out_c = launch(
+        td,
+        "C",
+        ["--snapshot-dir", str(td / "snapB"), "--resume"],
+    )
+    res_c, timing_c = load(out_c)
+    out["resume_round"] = timing_c.get("resume_round")
+    out["kill_resume_identical"] = identical(res_c, ref)
+
+    # D: worker 1 dies mid-save — shards staged, manifest never published
+    rc_d, _ = launch(
+        td,
+        "D",
+        [
+            "--snapshot-dir",
+            str(td / "snapD"),
+            "--snapshot-every",
+            "1",
+            "--die-round",
+            str(k),
+            "--die-stage",
+            "after-shards",
+            "--die-process",
+            "1",
+        ],
+        expect_fail=True,
+    )
+    out["torn_job_failed"] = rc_d != 0
+    published_d = sorted(p.name for p in (td / "snapD").glob("step_*"))
+    out["torn_last_published"] = (
+        int(published_d[-1].split("_")[1]) if published_d else 0
+    )
+
+    # E: resume D — the torn round k is skipped, resume starts at k-1
+    _, out_e = launch(
+        td,
+        "E",
+        ["--snapshot-dir", str(td / "snapD"), "--resume"],
+    )
+    res_e, timing_e = load(out_e)
+    out["torn_resume_round"] = timing_e.get("resume_round")
+    out["torn_resume_identical"] = identical(res_e, ref)
+
+    # F: single-process driver restores the 2-process snapshots
+    drv = PartitionDriver.resume(ef, CFG, td / "snapA")
+    res_f = drv.run()
+    out["crossproc_restore_identical"] = bool(
+        (res_f.edge_part == ref.edge_part).all()
+        and (res_f.vparts == ref.vparts).all()
+    )
+    ef.close()
+
+out["kill_resume_round_correct"] = (
+    out["kill_last_published"] == k and out["resume_round"] == k
+)
+out["torn_round_skipped"] = (
+    out["torn_last_published"] == k - 1 and out["torn_resume_round"] == k - 1
+)
+
+CHECKS = [
+    "multihost_matches_spmd",
+    "kill_job_failed",
+    "kill_resume_round_correct",
+    "kill_resume_identical",
+    "torn_job_failed",
+    "torn_round_skipped",
+    "torn_resume_identical",
+    "crossproc_restore_identical",
+]
+out["ok"] = all(out[c] for c in CHECKS)
+print("RESULT " + json.dumps(out))
+if not out["ok"]:
+    failed = [c for c in CHECKS if not out[c]]
+    print(f"FAILED checks: {failed}", file=sys.stderr)
+    raise SystemExit(1)

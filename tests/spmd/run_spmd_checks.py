@@ -118,7 +118,7 @@ for mod_name, mod, cfg in [
     out[f"engine_{mod_name}_loss_err"] = err
 
 # --- split-KV decode: seq-sharded cache == unsharded decode -----------------
-from jax.sharding import NamedSharding, PartitionSpec as SP  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
 
 from repro.dist.sharding import lm_rules  # noqa: E402
 from repro.models.lm import transformer as tfm  # noqa: E402

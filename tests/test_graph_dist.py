@@ -61,7 +61,8 @@ def test_shard_edges_roundtrip(graph, d):
     # invalid rows are zeroed
     assert (shards[~masks] == 0).all()
     # every edge appears exactly once across shards, none invented
-    key = lambda x: x[:, 0].astype(np.int64) * graph.num_vertices + x[:, 1]
+    def key(x):
+        return x[:, 0].astype(np.int64) * graph.num_vertices + x[:, 1]
     got = np.sort(np.concatenate([key(shards[i][masks[i]])
                                   for i in range(d)]))
     np.testing.assert_array_equal(got, np.sort(key(e)))

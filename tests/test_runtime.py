@@ -339,3 +339,122 @@ def test_run_snapshot_skips_half_written(tmp_path, graph12):
     got, rnd, mode = snap.restore_state()
     assert rnd == 1 and mode == "spmd"
     np.testing.assert_array_equal(got["edge_part"], fields["edge_part"])
+
+
+# ---------------------------------------------------------------------------
+# multi-writer snapshot protocol (repro.runtime.multihost)
+# ---------------------------------------------------------------------------
+
+def _multiwriter_save(snap, round_k, fields, ep, hosts=2):
+    """Replay the cooperative protocol single-process, in protocol order:
+    host 0 drives save_state_multihost, and the other hosts' shard writes
+    happen at the all-shards barrier — exactly where they land in a real
+    multi-process run (after begin_shared, before publish_shared)."""
+    d = ep.shape[0]
+    per_host = d // hosts
+
+    def slices(h):
+        return {i: ep[i] for i in range(h * per_host, (h + 1) * per_host)}
+
+    def barrier(name):
+        if name == f"snap-shards-{round_k}":
+            for h in range(1, hosts):
+                snap.mgr.write_host_shards(round_k, h,
+                                           {"edge_part": slices(h)})
+
+    snap.save_state_multihost(round_k, fields, "spmd", 0,
+                              {"edge_part": slices(0)}, {"edge_part": d},
+                              barrier)
+
+
+def test_multiwriter_layout_matches_single_writer(tmp_path, graph12):
+    """A cooperatively-written step restores byte-identically to a
+    single-writer step — cross process-count resume compatibility."""
+    fp = graph_fingerprint(graph12)
+    ep = np.arange(32, dtype=np.int32).reshape(8, 4)
+    fields = {"vparts": np.ones((6, 8), bool), "rounds": np.int32(5)}
+    single = RunSnapshot(tmp_path / "s1", CFG, fp)
+    single.save_state(5, dict(fields, edge_part=ep), "spmd")
+    multi = RunSnapshot(tmp_path / "s2", CFG, fp)
+    _multiwriter_save(multi, 5, fields, ep)
+    f1, r1, m1 = single.restore_state()
+    f2, r2, m2 = multi.restore_state()
+    assert (r1, m1) == (r2, m2) == (5, "spmd")
+    for k in f1:
+        np.testing.assert_array_equal(f1[k], f2[k])
+
+
+def test_multiwriter_unpublished_staging_is_invisible(tmp_path, graph12):
+    """A kill between shard staging and publish leaves only a dot-prefixed
+    tmp dir: the round is not listed, restore falls back, and the next
+    save of that round reclaims the staging."""
+    snap = RunSnapshot(tmp_path, CFG, graph_fingerprint(graph12))
+    ep = np.zeros((4, 3), np.int32)
+    fields = {"rounds": np.int32(1)}
+    _multiwriter_save(snap, 1, fields, ep)
+    # round 2 dies after host 0 staged its shards — no publish
+    meta = {"mode": "spmd", "round": 2, "config_fingerprint": snap.cfg_fp,
+            "graph_fingerprint": snap.graph_fp}
+    snap.mgr.begin_shared(2, {"rounds": np.int32(2)}, extra_meta=meta)
+    snap.mgr.write_host_shards(2, 0, {"edge_part": {0: ep[0], 1: ep[1]}})
+    assert snap.rounds() == [1]
+    _, rnd, _, _ = snap.restore_state_multihost([0, 1])
+    assert rnd == 1
+    # the next save of round 2 reclaims the leftover staging dir
+    _multiwriter_save(snap, 2, {"rounds": np.int32(2)}, ep)
+    assert snap.rounds() == [1, 2]
+    assert not snap.mgr.shared_tmp(2).exists()
+
+
+def test_multiwriter_refuses_missing_host_slices(tmp_path, graph12):
+    """publish_shared fails loudly if any global shard index was never
+    staged — a torn step must not become the newest published round."""
+    snap = RunSnapshot(tmp_path, CFG, graph_fingerprint(graph12))
+    meta = {"mode": "spmd", "round": 1, "config_fingerprint": snap.cfg_fp,
+            "graph_fingerprint": snap.graph_fp}
+    snap.mgr.begin_shared(1, {"rounds": np.int32(1)}, extra_meta=meta)
+    snap.mgr.write_host_shards(1, 0, {"edge_part": {0: np.zeros(3)}})
+    with pytest.raises(IOError, match="no host staged"):
+        snap.mgr.publish_shared(1, {"edge_part": 4})
+    assert snap.rounds() == []
+
+
+def test_restore_multihost_loads_owned_slices_only(tmp_path, graph12):
+    snap = RunSnapshot(tmp_path, CFG, graph_fingerprint(graph12))
+    ep = np.arange(20, dtype=np.int32).reshape(4, 5)
+    _multiwriter_save(snap, 3, {"rounds": np.int32(3)}, ep)
+    fields, rnd, mode, counts = snap.restore_state_multihost([1, 3])
+    assert (rnd, mode, counts) == (3, "spmd", {"edge_part": 4})
+    assert sorted(fields["edge_part"]) == [1, 3]
+    np.testing.assert_array_equal(fields["edge_part"][3], ep[3])
+
+
+# ---------------------------------------------------------------------------
+# exchange-dir ingestion (true multi-controller path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hosts", [1, 2, 3])
+def test_exchange_ingestion_bit_identical(store_file, tmp_path, hosts):
+    """Spill-per-host + assemble-owned == the sequential 2D-hash pass:
+    the round program cannot tell which process fed each shard."""
+    from repro.runtime.cluster import (exchange_assemble,
+                                       exchange_read_global,
+                                       exchange_write_range)
+
+    ref_sh, ref_mk, ref_cap, ref_dev, ref_edges = shard_edges_stream(
+        store_file, 4, with_edges=True)
+    ex = tmp_path / "exchange"
+    for h in range(hosts):
+        exchange_write_range(ex, store_file.path, h, hosts, 4)
+    shards, masks, cap, degree = exchange_assemble(ex, hosts, 4, [0, 2, 3])
+    assert cap == ref_cap
+    for d in (0, 2, 3):
+        np.testing.assert_array_equal(shards[d], ref_sh[d])
+        np.testing.assert_array_equal(masks[d], ref_mk[d])
+    edges, dev = exchange_read_global(ex, hosts)
+    np.testing.assert_array_equal(edges, ref_edges)
+    np.testing.assert_array_equal(dev, ref_dev)
+    deg = np.zeros(int(store_file.num_vertices), np.int64)
+    np.add.at(deg, ref_edges[:, 0], 1)
+    np.add.at(deg, ref_edges[:, 1], 1)
+    np.testing.assert_array_equal(degree, deg)
