@@ -20,6 +20,17 @@ subprocess per pipeline, numpy-only imports) of
 
 The paper's space-efficiency headline (§7.3) is the second path: the
 acceptance bar is streaming peak RSS ≤ 50% of in-memory at scale 18.
+
+Part 3 (``finalize_rss``, the CI *finalize-mem* gate) measures the
+multi-host **finalize epilogue** the same way: the pre-sharded epilogue
+(gather the global assignment + edges onto every host, stitch, cleanup,
+single-writer artifact) versus one host's share of the sharded epilogue
+(slice-local cleanup + per-host artifact contributions + owner encode) on
+the same scale-16 exchange, 4 hosts × 8 devices.  Both children are
+numpy-only — the epilogue path is deliberately jax-free — so the ratio
+measures the O(M)-vs-O(M/H) data, not interpreter baseline.  The
+acceptance bar: sharded per-host RSS ≤ 0.6× the pre-sharded epilogue,
+asserted on every run (``run.py --smoke`` fails the build on drift).
 """
 import tempfile
 
@@ -27,6 +38,11 @@ from benchmarks.common import child_peak_rss_kb, record
 from repro.graphs.rmat import rmat
 
 EF = 16
+
+# finalize-mem gate topology: scale 16, heavy edge factor (the epilogue
+# arrays must dwarf the ~40 MB numpy baseline), 4 hosts x 8 devices
+FIN_SCALE, FIN_EF, FIN_HOSTS, FIN_DEVICES, FIN_PARTS = 16, 64, 4, 8, 16
+FIN_BOUND = 0.6
 
 _INMEMORY = """
 from repro.graphs.rmat import rmat_edges
@@ -96,12 +112,184 @@ def build_rss_comparison(scale: int, ef: int = EF, chunk: int = 1 << 18):
     return ratio
 
 
+# every finalize child shares the same deterministic fabricated
+# assignment, so baseline and sharded children see identical data
+_FAKE_ASSIGN = """
+import numpy as np
+P = {parts}
+def fake_assign(u, v, eids):
+    val = ((u.astype(np.int64) * 31 + v.astype(np.int64) * 7 + eids) % P)
+    return np.where(eids % 97 == 0, -1, val).astype(np.int32)
+"""
+
+_FIN_BASELINE = _FAKE_ASSIGN + """
+# the PRE-sharded epilogue, faithfully: every host gathers the full
+# (D, cap) assignment + the flat edges/device map, stitches to edge
+# order, runs the whole-array cleanup, writes the artifact single-writer
+import tempfile, types
+from repro.core.epilogue import alpha_limit, cleanup_leftovers, \\
+    stitch_slices
+from repro.runtime.artifact import save_artifact
+from repro.runtime.cluster import exchange_read_global
+
+ex = {ex!r}; H = {hosts}; D = {devices}; n = {n}
+edges, dev = exchange_read_global(ex, H)              # O(M) x2
+m = edges.shape[0]
+eids_all = np.arange(m, dtype=np.int64)
+vals = fake_assign(edges[:, 0], edges[:, 1], eids_all)
+cap = int(np.bincount(dev, minlength=D).max())
+ep_sh = np.full((D, cap), -1, np.int32)               # the gather result
+eids = {{}}
+for d in range(D):
+    sel = np.flatnonzero(dev == d)
+    ep_sh[d, :sel.size] = vals[sel]
+    eids[d] = sel
+edge_part = np.full(m, -1, np.int32)                  # O(M) stitch
+stitch_slices(edge_part, {{d: ep_sh[d] for d in range(D)}}, eids)
+vparts = np.zeros((n, P), bool)
+ok = edge_part >= 0
+vparts[edges[ok, 0], edge_part[ok]] = True
+vparts[edges[ok, 1], edge_part[ok]] = True
+counts = np.bincount(edge_part[ok], minlength=P).astype(np.int32)
+limit = alpha_limit(1.1, m, P)
+cleanup_leftovers(edge_part, vparts, counts, edges, P, limit)
+res = types.SimpleNamespace(edge_part=edge_part, vparts=vparts,
+                            edges_per_part=counts, rounds=1, leftover=0)
+with tempfile.TemporaryDirectory() as td:
+    save_artifact(td + "/art", res, edges, n)
+"""
+
+_FIN_PREP = _FAKE_ASSIGN + """
+# staging for the measured host-0 child: hosts 1..H-1 run their halves
+# of the sharded protocol (leftover spills + artifact contributions) so
+# host 0's child exercises the full merge paths.  This child's RSS is
+# NOT recorded — each host here does the same O(M/H) work host 0 does.
+from repro.core.epilogue import alpha_limit
+from repro.runtime import finalize as fz
+from repro.runtime.artifact import begin_shared_artifact, \\
+    write_artifact_contrib
+from repro.runtime.cluster import exchange_assemble, shard_eids
+
+ex = {ex!r}; H = {hosts}; D = {devices}; n = {n}
+counts = np.asarray({counts!r}, np.int32)
+limit = alpha_limit(1.1, int({m}), P)
+fin = ex + "/finalize"
+begin_shared_artifact(ex + "/artifact")
+per_host = [[d for d in range(D) if d % H == h] for h in range(H)]
+state = {{}}
+for h in range(H):
+    owned = per_host[h]
+    sh, mk, cap, _ = exchange_assemble(ex, H, D, owned)
+    eids = shard_eids(ex, H, owned)
+    ep = {{d: fake_assign(sh[d][:eids[d].size, 0], sh[d][:eids[d].size, 1],
+                          eids[d]) for d in owned}}
+    us = {{d: sh[d][:eids[d].size, 0] for d in owned}}
+    vs = {{d: sh[d][:eids[d].size, 1] for d in owned}}
+    staged = fz.stage_leftovers(fin, h, ep, eids)
+    state[h] = (ep, us, vs, eids, staged)
+for h in range(1, H):
+    ep, us, vs, eids, staged = state[h]
+    vparts = np.zeros((n, P), bool)
+    fz.apply_leftovers(fin, h, H, staged, ep, us, vs, eids, counts,
+                       limit, P, vparts)
+    write_artifact_contrib(ex + "/artifact", h,
+                           fz.partition_contribs(ep, us, vs, eids, P))
+"""
+
+_FIN_SHARDED = _FAKE_ASSIGN + """
+# host 0's share of the sharded epilogue — the per-host memory envelope
+# the paper's 256-machine deployment pays: owned slices only, slice-local
+# cleanup, per-host artifact contributions, owner encode.  No (M,) array
+# anywhere.
+from repro.core.epilogue import alpha_limit
+from repro.runtime import finalize as fz
+from repro.runtime.artifact import encode_shared_parts, \\
+    write_artifact_contrib
+from repro.runtime.cluster import exchange_assemble, shard_eids
+
+ex = {ex!r}; H = {hosts}; D = {devices}; n = {n}
+counts = np.asarray({counts!r}, np.int32)
+limit = alpha_limit(1.1, int({m}), P)
+fin = ex + "/finalize"
+owned = [d for d in range(D) if d % H == 0]
+sh, mk, cap, _ = exchange_assemble(ex, H, D, owned)   # O(owned shards)
+eids = shard_eids(ex, H, owned)                       # streamed
+ep = {{d: fake_assign(sh[d][:eids[d].size, 0], sh[d][:eids[d].size, 1],
+                      eids[d]) for d in owned}}
+us = {{d: sh[d][:eids[d].size, 0] for d in owned}}
+vs = {{d: sh[d][:eids[d].size, 1] for d in owned}}
+staged = fz.stage_leftovers(fin, 0, ep, eids)
+vparts = np.zeros((n, P), bool)
+take, total = fz.apply_leftovers(fin, 0, H, staged, ep, us, vs, eids,
+                                 counts, limit, P, vparts)
+write_artifact_contrib(ex + "/artifact", 0,
+                       fz.partition_contribs(ep, us, vs, eids, P))
+encode_shared_parts(ex + "/artifact", 0, [p for p in range(P) if p % H == 0],
+                    H)
+"""
+
+
+def finalize_rss_gate():
+    """Measured finalize-epilogue RSS: pre-sharded (global gather) vs one
+    host's share of the sharded epilogue, on a scale-16 store exchange."""
+    import numpy as np
+
+    from repro.runtime.cluster import (exchange_read_global,
+                                       exchange_write_range)
+
+    with tempfile.TemporaryDirectory() as td:
+        import repro.io as rio
+
+        ef = rio.spill_canonical_rmat(td + "/graph", FIN_SCALE, FIN_EF,
+                                      seed=0, chunk_size=1 << 18)
+        n, m = int(ef.num_vertices), int(ef.num_edges)
+        ef_path = str(ef.path)
+        ef.close()
+        ex = td + "/exchange"
+        for h in range(FIN_HOSTS):
+            exchange_write_range(ex, ef_path, h, FIN_HOSTS, FIN_DEVICES)
+        # global |E_p| counts of the fabricated assignment (replicated
+        # round state in a real run; parent memory is not measured)
+        edges, _ = exchange_read_global(ex, FIN_HOSTS)
+        eids = np.arange(m, dtype=np.int64)
+        vals = ((edges[:, 0].astype(np.int64) * 31
+                 + edges[:, 1].astype(np.int64) * 7 + eids) % FIN_PARTS)
+        vals = np.where(eids % 97 == 0, -1, vals).astype(np.int32)
+        counts = np.bincount(vals[vals >= 0],
+                             minlength=FIN_PARTS).astype(np.int64)
+        del edges, eids, vals
+
+        fmt = dict(ex=ex, hosts=FIN_HOSTS, devices=FIN_DEVICES, n=n, m=m,
+                   parts=FIN_PARTS, counts=counts.tolist())
+        base_kb = child_peak_rss_kb(_FIN_BASELINE.format(**fmt))
+        child_peak_rss_kb(_FIN_PREP.format(**fmt))       # staging only
+        shard_kb = child_peak_rss_kb(_FIN_SHARDED.format(**fmt))
+
+    ratio = shard_kb / max(base_kb, 1)
+    record(f"finalize_rss_s{FIN_SCALE}_h{FIN_HOSTS}", 0.0,
+           f"baseline_mb={base_kb / 1024:.1f};"
+           f"sharded_mb={shard_kb / 1024:.1f};ratio={ratio:.2f};"
+           f"bound<={FIN_BOUND}")
+    if ratio > FIN_BOUND:
+        raise AssertionError(
+            f"sharded finalize RSS drift: per-host epilogue is "
+            f"{ratio:.2f}x the pre-sharded baseline (bound "
+            f"{FIN_BOUND}) — an O(M) structure crept back into the "
+            f"multi-host epilogue "
+            f"(sharded {shard_kb / 1024:.1f} MB vs baseline "
+            f"{base_kb / 1024:.1f} MB)")
+    return ratio
+
+
 def main(smoke: bool = False, fast: bool = False):
     if not smoke:
         fig9_analytic()
     scale = 12 if smoke else (14 if fast else 18)
     chunk = 1 << 14 if smoke else (1 << 16 if fast else 1 << 18)
     build_rss_comparison(scale, EF, chunk=chunk)
+    # the finalize-mem gate always runs at scale 16 — the per-host-vs-
+    # global contrast needs the epilogue arrays to dwarf the interpreter
+    finalize_rss_gate()
 
 
 if __name__ == "__main__":

@@ -50,6 +50,19 @@ _RSS_PROLOGUE = """
 import os as _os, threading as _th, time as _time
 _page_kb = _os.sysconf("SC_PAGE_SIZE") // 1024
 _peak = [0]
+def _vm_hwm_kb():
+    # the kernel's own lifetime watermark: monotone, so a one-instant
+    # allocation spike between (or after) samples can never be lost —
+    # unlike sampled VmRSS, which under-reports whenever the child
+    # outlives the spike by more than the sample interval
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    return 0
 def _vm_rss_kb():
     try:
         with open("/proc/self/statm") as f:
@@ -60,23 +73,20 @@ def _sample():
     while True:
         _peak[0] = max(_peak[0], _vm_rss_kb())
         _time.sleep(0.002)
-_th.Thread(target=_sample, daemon=True).start()
+if _vm_hwm_kb() == 0:
+    # no VmHWM on this kernel: fall back to sampling instantaneous VmRSS
+    _th.Thread(target=_sample, daemon=True).start()
 """
 
 _RSS_EPILOGUE = """
 def _peak_rss_kb():
-    peak = max(_peak[0], _vm_rss_kb())
-    # prefer the kernel watermark where /proc provides one (it catches
-    # transients the sampler can miss); ru_maxrss is NOT trustworthy here:
-    # it survives execve, so a child of a jax-loaded parent inherits the
-    # parent's watermark through it.
-    try:
-        with open("/proc/self/status") as f:
-            for line in f:
-                if line.startswith("VmHWM:"):
-                    peak = max(peak, int(line.split()[1]))
-    except OSError:
-        pass
+    # VmHWM is the ground truth where /proc provides it; the VmRSS
+    # sampler only backs up kernels without it.  ru_maxrss is NOT
+    # trustworthy here: it survives execve, so a child of a jax-loaded
+    # parent inherits the parent's watermark through it.
+    peak = _vm_hwm_kb()
+    if peak == 0:
+        peak = max(_peak[0], _vm_rss_kb())
     if peak == 0:
         import resource
         peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
@@ -89,9 +99,9 @@ def child_peak_rss_kb(child_code: str, timeout: float = 600.0) -> int:
     """Run ``child_code`` in a fresh interpreter, return its peak RSS (KiB).
 
     Peak RSS is a process-lifetime maximum, so two pipelines can only be
-    compared from separate processes.  The child samples its own VmRSS on a
-    background thread (plus VmHWM where available) and prints the high-water
-    mark as the last stdout line.
+    compared from separate processes.  The child reads the kernel's VmHWM
+    watermark (falling back to a sampled-VmRSS thread on kernels without
+    it) and prints the high-water mark as the last stdout line.
     """
     code = _RSS_PROLOGUE + child_code + _RSS_EPILOGUE
     env = dict(os.environ)

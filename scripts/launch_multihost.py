@@ -68,7 +68,15 @@ def build_parser() -> argparse.ArgumentParser:
     job.add_argument(
         "--out",
         default=None,
-        help="process 0 writes result.npz + timing.json here",
+        help="process 0 writes result.npz + timing.json here (forces the "
+        "lazy edge_part materialization — a debug/test surface)",
+    )
+    job.add_argument(
+        "--artifact-out",
+        default=None,
+        help="persist the result as a partition artifact via the "
+        "cooperative multi-writer save (sharded: no process ever holds "
+        "the global assignment)",
     )
 
     cl = ap.add_argument_group("cluster")

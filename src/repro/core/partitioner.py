@@ -31,21 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.epilogue import (alpha_limit, cleanup_leftovers,  # noqa: F401 — re-exported epilogue surface
+                                 leftover_plan, leftover_targets)
 from repro.core.graph import Graph, as_graph, exclusive_rank
+from repro.core.metrics import stats_from_counts
 
 Array = jax.Array
 I32_INF = np.iinfo(np.int32).max
-
-
-def alpha_limit(alpha: float, m: int, num_partitions: int) -> int:
-    """α-capacity limit ``⌊α·|E|/|P|⌋`` (paper Alg. 1).
-
-    The single shared definition for every enforcement site — the cleanup
-    pass and SPMD/single-controller parity depend on the expression staying
-    bit-identical between ``_partition_jit``, ``partition`` and
-    ``dist.partitioner_sm``.
-    """
-    return int(alpha * m / num_partitions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,13 +73,45 @@ class NEState(NamedTuple):
     new_last_round: Array   # ()     int32  edges allocated in last round
 
 
-@dataclasses.dataclass(frozen=True)
 class PartitionResult:
-    edge_part: np.ndarray       # (M,) int32 final assignment
-    vparts: np.ndarray          # (N, P) bool replica sets
-    edges_per_part: np.ndarray  # (P,) int32
-    rounds: int
-    leftover: int               # edges assigned by the cleanup pass
+    """Final output of a partitioning run.
+
+    Fields: ``edge_part`` (M,) int32 final assignment, ``vparts`` (N, P)
+    bool replica sets, ``edges_per_part`` (P,) int32, ``rounds``,
+    ``leftover`` (edges assigned by the cleanup pass), and optional
+    ``stats`` (:class:`repro.core.metrics.PartitionStats`, filled by the
+    finalize epilogue from the replica/edge counts).
+
+    ``edge_part`` may be passed as a zero-argument callable: the sharded
+    multi-controller epilogue hands back a *lazy* assignment so that no
+    host materializes the O(M) global array unless a consumer explicitly
+    asks for it — intended for small graphs and tests; production
+    consumers read the per-partition artifact shards and ``stats``
+    instead.  Materialization is cached.
+    """
+
+    __slots__ = ("_edge_part", "vparts", "edges_per_part", "rounds",
+                 "leftover", "stats")
+
+    def __init__(self, edge_part, vparts, edges_per_part, rounds, leftover,
+                 stats=None):
+        self._edge_part = edge_part
+        self.vparts = vparts
+        self.edges_per_part = edges_per_part
+        self.rounds = rounds
+        self.leftover = leftover
+        self.stats = stats
+
+    @property
+    def edge_part(self) -> np.ndarray:
+        if callable(self._edge_part):
+            self._edge_part = self._edge_part()
+        return self._edge_part
+
+    @property
+    def edge_part_materialized(self) -> bool:
+        """False while a lazy assignment has not been forced yet."""
+        return not callable(self._edge_part)
 
 
 def priority_enc(count: Array, p: Array, num_partitions: int) -> Array:
@@ -304,75 +328,26 @@ def _partition_jit(g: Graph, cfg: NEConfig) -> NEState:
     return jax.lax.while_loop(cond, partial(_round, g, cfg, limit), init)
 
 
-def _waterfill(counts: np.ndarray, cap: np.ndarray, k: int) -> np.ndarray:
-    """Per-partition takes for ``k`` unit increments, each going to the
-    currently least-loaded partition with remaining capacity — the greedy
-    computed in closed form (binary search on the fill level) instead of
-    k sequential argmins.  Ties at the final level break by partition id.
-    """
-    take = np.zeros_like(counts)
-    if k <= 0:
-        return take
-
-    def filled(level: int) -> int:
-        return int(np.minimum(np.maximum(level - counts, 0), cap).sum())
-
-    lo, hi = int(counts.min()), int(counts.max()) + k + 1
-    while lo < hi:                  # largest level with filled(level) <= k
-        mid = (lo + hi + 1) // 2
-        if filled(mid) <= k:
-            lo = mid
-        else:
-            hi = mid - 1
-    take = np.minimum(np.maximum(lo - counts, 0), cap)
-    spill = k - int(take.sum())
-    if spill > 0:
-        room = np.nonzero((take < cap) & (counts + take == lo))[0]
-        take[room[:spill]] += 1
-    return take
-
-
-def cleanup_leftovers(edge_part: np.ndarray, vparts: np.ndarray,
-                      counts: np.ndarray, edges: np.ndarray,
-                      num_partitions: int, limit: int) -> int:
-    """Assign unallocated edges (the max_rounds safety hatch), in place.
-
-    Leftovers water-fill the least-loaded partitions while they are under
-    the α-capacity ``limit``; only when every partition is at capacity does
-    the overflow water-fill freely (still least-loaded first), so balance
-    degrades as slowly as possible.  Returns the number of edges assigned.
-    """
-    rem = np.nonzero(edge_part < 0)[0]
-    if rem.size == 0:
-        return 0
-    c64 = counts.astype(np.int64)
-    free = np.maximum(limit - c64, 0)
-    k_capped = min(int(rem.size), int(free.sum()))
-    take = _waterfill(c64, free, k_capped)
-    overflow = int(rem.size) - k_capped
-    if overflow:
-        no_cap = np.full(num_partitions, overflow, np.int64)
-        take = take + _waterfill(c64 + take, no_cap, overflow)
-    tgt = np.repeat(np.arange(num_partitions, dtype=np.int32), take)
-    edge_part[rem] = tgt
-    counts += take.astype(counts.dtype)
-    vparts[edges[rem, 0], tgt] = True
-    vparts[edges[rem, 1], tgt] = True
-    return int(rem.size)
-
-
 def finalize_result(edge_part, vparts, counts, edges: np.ndarray,
                     cfg: NEConfig, rounds: int) -> PartitionResult:
-    """Host-side epilogue shared by every partitioner entry point: copy the
-    device state (asarray views of jax arrays are read-only, the cleanup
-    pass mutates in place), water-fill the max_rounds leftovers, wrap."""
+    """Host-side epilogue shared by every single-controller entry point:
+    copy the device state (asarray views of jax arrays are read-only, the
+    cleanup pass mutates in place), water-fill the max_rounds leftovers
+    (``repro.core.epilogue``), attach the quality stats, wrap.
+
+    The multi-controller driver runs the same epilogue *per shard slice*
+    (``repro.runtime.finalize``) — this whole-array form is the small
+    graph / test path.
+    """
     edge_part = np.array(edge_part)
     vparts = np.array(vparts)
     counts = np.array(counts)
     limit = alpha_limit(cfg.alpha, edges.shape[0], cfg.num_partitions)
     leftover = cleanup_leftovers(edge_part, vparts, counts, edges,
                                  cfg.num_partitions, limit)
-    return PartitionResult(edge_part, vparts, counts, int(rounds), leftover)
+    stats = stats_from_counts(vparts.sum(axis=0), counts, vparts.shape[0])
+    return PartitionResult(edge_part, vparts, counts, int(rounds), leftover,
+                           stats)
 
 
 def partition(g: Graph, cfg: NEConfig) -> PartitionResult:

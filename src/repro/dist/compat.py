@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["all_processes_min", "barrier", "make_mesh", "process_env",
-           "pvary", "set_mesh", "shard_map"]
+__all__ = ["all_processes_any", "all_processes_min", "all_processes_sum",
+           "barrier", "make_mesh", "process_env", "pvary", "set_mesh",
+           "shard_map"]
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -105,6 +106,58 @@ def all_processes_min(value: int) -> int:
 
     vals = multihost_utils.process_allgather(np.int64(value))
     return int(np.min(vals))
+
+
+def all_processes_sum(value: int) -> int:
+    """Sum of a host-side int across all processes (identity locally).
+
+    The sharded finalize uses it to agree on the *global* leftover count
+    from per-host partials — the scalar half of the metrics-combine step.
+    """
+    if process_env()[1] == 1:
+        return int(value)
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    vals = multihost_utils.process_allgather(np.int64(value))
+    return int(np.sum(vals))
+
+
+# per-host scratch budget for the chunked allgather-OR below: each chunk
+# materializes H copies of `chunk` bools, so chunk = BUDGET / H keeps the
+# peak flat as the host count grows
+_ANY_CHUNK_BYTES = 64 << 20
+
+
+def all_processes_any(mask):
+    """Element-wise OR of a host-side bool array across all processes
+    (identity locally).
+
+    The array half of the sharded finalize's metrics-combine: each host
+    applies only its own slices' leftover updates to its replica-map
+    copy, and the per-host deltas merge into the global ``V(E_p)`` here —
+    O(N·P) communication, never O(M).  The allgather runs in fixed-byte
+    chunks (every process iterates the same boundaries, so it stays a
+    valid collective sequence): a whole-array ``process_allgather`` would
+    stage H copies of the replica map on every host, re-growing the
+    per-host envelope with the cluster size the sharded epilogue exists
+    to cap.
+    """
+    import numpy as np
+
+    mask = np.asarray(mask, bool)
+    nprocs = process_env()[1]
+    if nprocs == 1:
+        return mask
+    from jax.experimental import multihost_utils
+
+    flat = mask.reshape(-1)
+    out = np.empty_like(flat)
+    chunk = max(1, _ANY_CHUNK_BYTES // nprocs)
+    for i in range(0, flat.size, chunk):
+        gathered = multihost_utils.process_allgather(flat[i:i + chunk])
+        out[i:i + chunk] = np.any(gathered, axis=0)
+    return out.reshape(mask.shape)
 
 
 def set_mesh(mesh):

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.epilogue import stitch_slices
 from repro.core.graph import Graph, exclusive_rank, shard_edges
 from repro.core.partitioner import (I32_INF, NEConfig, PartitionResult,
                                     alpha_limit, finalize_result,
@@ -224,13 +225,18 @@ def spmd_done(state: SpmdState, cfg: NEConfig) -> bool:
 def stitch_edge_part(ep_sh: np.ndarray, dev: np.ndarray, m: int,
                      ) -> np.ndarray:
     """Shard-order assignments back to global edge order: shard d holds
-    ``edges[dev == d]`` in their original relative order."""
+    ``edges[dev == d]`` in their original relative order.
+
+    This whole-layout form allocates the O(M) output and is only for
+    single-controller runs and explicit (lazy) materialization; the
+    sharded multi-controller epilogue uses the slice-local
+    ``repro.core.epilogue.stitch_slices`` it is built on, scattering one
+    owned shard at a time into a caller-owned buffer.
+    """
     edge_part = np.full((m,), -1, np.int32)
     ep_sh = np.asarray(ep_sh)
-    for dd in range(ep_sh.shape[0]):
-        idx = np.nonzero(dev == dd)[0]
-        edge_part[idx] = ep_sh[dd, : idx.size]
-    return edge_part
+    eids = {dd: np.flatnonzero(dev == dd) for dd in range(ep_sh.shape[0])}
+    return stitch_slices(edge_part, {dd: ep_sh[dd] for dd in eids}, eids)
 
 
 @partial(jax.jit, static_argnames=("cfg", "limit", "n", "mesh"))

@@ -1,0 +1,50 @@
+"""Crash-safe directory publication — the one atomic-publish protocol.
+
+Shared by the checkpoint store, the partition artifact store and the
+multi-writer finalize staging.  Lives under ``repro.io`` (jax-free) so
+the stores stay importable from numpy-only processes — ingestion spawn
+workers and the ``bench_memory`` RSS children must not drag jax in.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from pathlib import Path
+
+
+def fsync_path(path: Path) -> None:
+    """fsync a file or directory — the directory fsync is what makes the
+    tmp→final rename durable across power loss, not just process crash."""
+    flags = os.O_RDONLY | (os.O_DIRECTORY if path.is_dir() else 0)
+    fd = os.open(path, flags)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def publish_dir(tmp: Path, final: Path) -> None:
+    """Atomically publish a fully-staged ``tmp`` dir at ``final``.
+
+    The one crash-safe publish protocol, shared by the checkpoint store
+    and the partition artifact store: fsync the staged dir, swap with two
+    renames when ``final`` already exists (the old version stays visible
+    until the new one is fully in place, and the crash window is the
+    instant between renames — during which both complete dirs still exist
+    on disk), fsync the parent.  Stale ``.trash_*`` leftovers of an
+    earlier crashed swap are reclaimed up front, whichever branch runs.
+    """
+    fsync_path(tmp)
+    trash = final.parent / f".trash_{final.name}"
+    if trash.exists():
+        shutil.rmtree(trash)               # orphan of a killed swap
+    if final.exists():
+        final.rename(trash)
+        tmp.rename(final)
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        tmp.rename(final)
+    fsync_path(final.parent)
+
+
+__all__ = ["fsync_path", "publish_dir"]

@@ -20,8 +20,12 @@ import importlib
 _EXPORTS = {
     "ARTIFACT_VERSION": "repro.runtime.artifact",
     "PartitionArtifact": "repro.runtime.artifact",
+    "begin_shared_artifact": "repro.runtime.artifact",
+    "encode_shared_parts": "repro.runtime.artifact",
     "load_artifact": "repro.runtime.artifact",
+    "publish_shared_artifact": "repro.runtime.artifact",
     "save_artifact": "repro.runtime.artifact",
+    "write_artifact_contrib": "repro.runtime.artifact",
     "exchange_assemble": "repro.runtime.cluster",
     "exchange_counts": "repro.runtime.cluster",
     "exchange_read_global": "repro.runtime.cluster",
@@ -31,6 +35,13 @@ _EXPORTS = {
     "ingest_host_range": "repro.runtime.cluster",
     "my_block_range": "repro.runtime.cluster",
     "process_info": "repro.runtime.cluster",
+    "reshard_assemble": "repro.runtime.cluster",
+    "reshard_write": "repro.runtime.cluster",
+    "shard_eids": "repro.runtime.cluster",
+    "apply_leftovers": "repro.runtime.finalize",
+    "leftover_assignments": "repro.runtime.finalize",
+    "partition_contribs": "repro.runtime.finalize",
+    "stage_leftovers": "repro.runtime.finalize",
     "PartitionDriver": "repro.runtime.driver",
     "initialize_distributed": "repro.runtime.multihost",
     "launch_local": "repro.runtime.multihost",

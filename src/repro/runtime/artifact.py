@@ -26,6 +26,38 @@ atomic rename (same crash-safety contract as the checkpoint store).
 ``apps.engine.build_sharded_graph`` / ``dist.redistribute`` directly, and
 the full ``edge_part`` / ``vparts`` reconstruct bit-identically for the
 GNN training path — no re-partitioning, ever.
+
+**Cooperative multi-writer save** (the sharded finalize epilogue): under
+``jax.distributed`` no host holds the global assignment, so the artifact
+is staged cooperatively, mirroring the snapshot
+``begin_shared``/``publish_shared`` protocol —
+
+  host 0:      ``begin_shared_artifact``    — staging dir
+  <barrier>
+  every host:  ``write_artifact_contrib``   — its slices' per-partition
+                                              (eid, u, v) spills, fsynced
+  <barrier>
+  every host:  ``encode_shared_parts``      — owner of partition ``p``
+                                              (``p % num_hosts``) merges
+                                              all hosts' spills, encodes
+                                              ``part_<p>.bin``, stages a
+                                              per-host meta manifest
+  <barrier>
+  host 0:      ``publish_shared_artifact``  — merge metas (refusing torn
+                                              staging), write replicas +
+                                              manifest, atomic rename
+
+The caller owns the barriers (``repro.runtime.driver``).  The published
+bytes are identical to a single-writer ``save_artifact`` of the same
+result — same shard files, checksums and manifest — because both paths
+share :func:`_encode_partition` and partition edges are merged back into
+ascending-eid order before encoding (asserted by tests/test_runtime.py
+and the multihost CI checks).  A kill at any point before publish leaves
+only the dot-prefixed staging dir; a pre-existing artifact at the target
+stays intact.
+
+This module is importable without jax (the ``PartitionResult`` import is
+lazy) — the ``bench_memory`` finalize-RSS children depend on that.
 """
 from __future__ import annotations
 
@@ -37,10 +69,9 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.partitioner import PartitionResult
+from repro.io.atomicdir import publish_dir
 from repro.io.compress import (varint_decode, varint_encode, zigzag_decode,
                                zigzag_encode)
-from repro.train.checkpoint import publish_dir
 
 ARTIFACT_VERSION = 1
 MANIFEST = "manifest.json"
@@ -69,11 +100,61 @@ def _sha1(raw: bytes) -> str:
     return hashlib.sha1(raw).hexdigest()[:16]
 
 
-def save_artifact(dirpath: str | os.PathLike, result: PartitionResult,
+def _encode_partition(u: np.ndarray, v: np.ndarray, eids: np.ndarray,
+                      ) -> tuple[bytes, dict]:
+    """One partition's shard bytes + manifest entry, from its edges in
+    ascending-eid order.  The single encoder both the single-writer and
+    the cooperative multi-writer save go through — byte-identity between
+    the two is by construction, not by test luck."""
+    blobs = (_encode_stream(u), _encode_stream(v), _encode_stream(eids))
+    raw = b"".join(blobs)
+    meta = {
+        "edges": int(np.asarray(eids).shape[0]),
+        "nbytes": [len(b) for b in blobs],
+        "sha1": _sha1(raw),
+    }
+    return raw, meta
+
+
+def _fsync_write(path: Path | str, raw: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(raw)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _manifest_dict(*, num_vertices: int, num_edges: int,
+                   num_partitions: int, rounds: int, leftover: int,
+                   vparts_sum: int, edges_per_part, replicas_sha1: str,
+                   parts_meta: list, config_fingerprint, graph_fingerprint,
+                   ) -> dict:
+    """The manifest in its one canonical key order — ``json.dumps`` of
+    this dict must produce identical bytes from both save paths."""
+    return {
+        "version": ARTIFACT_VERSION,
+        "num_vertices": int(num_vertices), "num_edges": int(num_edges),
+        "num_partitions": int(num_partitions),
+        "rounds": int(rounds), "leftover": int(leftover),
+        "replication_factor": float(vparts_sum / max(num_vertices, 1)),
+        "edges_per_part": [int(c) for c in edges_per_part],
+        "replicas_sha1": replicas_sha1,
+        "partitions": parts_meta,
+        "config_fingerprint": config_fingerprint,
+        "graph_fingerprint": graph_fingerprint,
+    }
+
+
+def save_artifact(dirpath: str | os.PathLike, result,
                   edges: np.ndarray, num_vertices: int,
                   config_fingerprint: str | None = None,
                   graph_fingerprint: str | None = None) -> "PartitionArtifact":
-    """Persist ``result`` (+ the edges it partitioned) under ``dirpath``."""
+    """Persist ``result`` (+ the edges it partitioned) under ``dirpath``.
+
+    ``result`` is a :class:`~repro.core.partitioner.PartitionResult` (or
+    anything exposing its fields).  This is the single-writer path; it
+    reads the full ``edge_part``, so multi-controller drivers use the
+    cooperative protocol below instead.
+    """
     edges = np.asarray(edges)
     edge_part = np.asarray(result.edge_part)
     vparts = np.asarray(result.vparts, bool)
@@ -102,43 +183,144 @@ def save_artifact(dirpath: str | os.PathLike, result: PartitionResult,
     for p in range(p_num):
         eids = order[bounds[p]:bounds[p + 1]]
         e = edges[eids]
-        blobs = (_encode_stream(e[:, 0]), _encode_stream(e[:, 1]),
-                 _encode_stream(eids))
-        raw = b"".join(blobs)
-        with open(tmp / f"part_{p:05d}.bin", "wb") as f:
-            f.write(raw)
-            f.flush()
-            os.fsync(f.fileno())
-        parts_meta.append({
-            "edges": int(eids.size),
-            "nbytes": [len(b) for b in blobs],
-            "sha1": _sha1(raw),
-        })
+        raw, meta = _encode_partition(e[:, 0], e[:, 1], eids)
+        _fsync_write(tmp / f"part_{p:05d}.bin", raw)
+        parts_meta.append(meta)
 
     rep_raw = np.packbits(vparts, axis=None).tobytes()
-    with open(tmp / "replicas.bin", "wb") as f:
-        f.write(rep_raw)
-        f.flush()
-        os.fsync(f.fileno())
+    _fsync_write(tmp / "replicas.bin", rep_raw)
 
-    rf = float(vparts.sum() / max(n, 1))
-    manifest = {
-        "version": ARTIFACT_VERSION,
-        "num_vertices": n, "num_edges": m, "num_partitions": p_num,
-        "rounds": int(result.rounds), "leftover": int(result.leftover),
-        "replication_factor": rf,
-        "edges_per_part": [int(c) for c in result.edges_per_part],
-        "replicas_sha1": _sha1(rep_raw),
-        "partitions": parts_meta,
-        "config_fingerprint": config_fingerprint,
-        "graph_fingerprint": graph_fingerprint,
-    }
-    with open(tmp / MANIFEST, "w") as f:
-        f.write(json.dumps(manifest))
-        f.flush()
-        os.fsync(f.fileno())
+    manifest = _manifest_dict(
+        num_vertices=n, num_edges=m, num_partitions=p_num,
+        rounds=result.rounds, leftover=result.leftover,
+        vparts_sum=int(vparts.sum()), edges_per_part=result.edges_per_part,
+        replicas_sha1=_sha1(rep_raw), parts_meta=parts_meta,
+        config_fingerprint=config_fingerprint,
+        graph_fingerprint=graph_fingerprint)
+    _fsync_write(tmp / MANIFEST, json.dumps(manifest).encode())
     publish_dir(tmp, final)
     return PartitionArtifact(final)
+
+
+# ---------------------------------------------------------------------------
+# cooperative multi-writer save (sharded finalize epilogue)
+# ---------------------------------------------------------------------------
+
+def _shared_tmp(dirpath: str | os.PathLike) -> Path:
+    final = Path(dirpath)
+    return final.parent / f".tmp_{final.name}"
+
+
+def begin_shared_artifact(dirpath: str | os.PathLike) -> Path:
+    """Writer-0 half: create (reclaiming any torn leftover) the shared
+    dot-prefixed staging dir every host writes into."""
+    tmp = _shared_tmp(dirpath)
+    if tmp.exists():
+        shutil.rmtree(tmp)                 # leftover of a killed save
+    tmp.mkdir(parents=True)
+    return tmp
+
+
+def write_artifact_contrib(dirpath: str | os.PathLike, host: int,
+                           contribs: dict) -> None:
+    """Any host: spill its slices' per-partition contributions.
+
+    ``contribs[p] = (eids, u, v)`` — this host's partition-``p`` edges
+    in ascending-eid order (``repro.runtime.finalize.partition_contribs``).
+    Raw layout per file: int64 eids ‖ int32 u ‖ int32 v, so readers
+    recover the count from the byte length alone.  Every host writes a
+    file for every partition (possibly empty) — a missing file at encode
+    time means a torn stage, not an empty contribution.
+    """
+    tmp = _shared_tmp(dirpath)
+    for p, (eids, u, v) in contribs.items():
+        raw = (np.ascontiguousarray(eids, np.int64).tobytes()
+               + np.ascontiguousarray(u, np.int32).tobytes()
+               + np.ascontiguousarray(v, np.int32).tobytes())
+        _fsync_write(tmp / f".contrib_h{host:03d}_p{p:05d}.bin", raw)
+
+
+def _read_contrib(tmp: Path, host: int, p: int,
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    path = tmp / f".contrib_h{host:03d}_p{p:05d}.bin"
+    if not path.exists():
+        raise IOError(f"multi-writer artifact: host {host} never staged "
+                      f"its partition {p} contribution — torn stage")
+    raw = path.read_bytes()
+    k = len(raw) // 16
+    eids = np.frombuffer(raw[:8 * k], np.int64)
+    u = np.frombuffer(raw[8 * k:12 * k], np.int32)
+    v = np.frombuffer(raw[12 * k:16 * k], np.int32)
+    return eids, u, v
+
+
+def encode_shared_parts(dirpath: str | os.PathLike, host: int,
+                        parts: list, num_hosts: int) -> dict:
+    """Any host, after every contribution staged: merge all hosts' spills
+    for the partitions it owns, encode the ``part_<p>.bin`` shards, and
+    stage a per-host meta manifest.  Peak memory O(max |E_p|)."""
+    tmp = _shared_tmp(dirpath)
+    metas: dict[str, dict] = {}
+    for p in parts:
+        cols = [_read_contrib(tmp, h, p) for h in range(num_hosts)]
+        eids = np.concatenate([c[0] for c in cols])
+        u = np.concatenate([c[1] for c in cols])
+        v = np.concatenate([c[2] for c in cols])
+        # hosts own interleaved eid ranges; merge back to the ascending
+        # eid order the single-writer path produces
+        order = np.argsort(eids, kind="stable")
+        raw, meta = _encode_partition(u[order], v[order], eids[order])
+        _fsync_write(tmp / f"part_{p:05d}.bin", raw)
+        metas[str(p)] = meta
+    _fsync_write(tmp / f".artmeta_h{host:03d}.json",
+                 json.dumps(metas).encode())
+    return metas
+
+
+def publish_shared_artifact(dirpath: str | os.PathLike, *,
+                            num_vertices: int, num_edges: int,
+                            num_partitions: int, num_hosts: int,
+                            vparts: np.ndarray, edges_per_part,
+                            rounds: int, leftover: int,
+                            config_fingerprint: str | None = None,
+                            graph_fingerprint: str | None = None,
+                            ) -> "PartitionArtifact":
+    """Writer-0, after every host encoded: merge the per-host metas into
+    the canonical manifest, write the replica map, clean the staging
+    spills and publish atomically.  A partition nobody encoded — or eid
+    streams that do not cover every edge — fails loudly instead of
+    publishing a torn artifact."""
+    tmp = _shared_tmp(dirpath)
+    merged: list = [None] * num_partitions
+    for hp in sorted(tmp.glob(".artmeta_h*.json")):
+        for p, meta in json.loads(hp.read_text()).items():
+            merged[int(p)] = meta
+    missing = [p for p, m in enumerate(merged) if m is None]
+    if missing:
+        raise IOError(f"multi-writer artifact: no host encoded partitions "
+                      f"{missing} — refusing to publish a torn artifact")
+    covered = sum(m["edges"] for m in merged)
+    if covered != int(num_edges):
+        raise IOError(f"multi-writer artifact: partition shards cover "
+                      f"{covered} of {num_edges} edges — refusing to "
+                      f"publish a torn artifact")
+
+    vparts = np.asarray(vparts, bool)
+    rep_raw = np.packbits(vparts, axis=None).tobytes()
+    _fsync_write(tmp / "replicas.bin", rep_raw)
+    manifest = _manifest_dict(
+        num_vertices=num_vertices, num_edges=num_edges,
+        num_partitions=num_partitions, rounds=rounds, leftover=leftover,
+        vparts_sum=int(vparts.sum()), edges_per_part=edges_per_part,
+        replicas_sha1=_sha1(rep_raw), parts_meta=merged,
+        config_fingerprint=config_fingerprint,
+        graph_fingerprint=graph_fingerprint)
+    for leftover_file in list(tmp.glob(".contrib_h*")) \
+            + list(tmp.glob(".artmeta_h*")):
+        leftover_file.unlink()
+    _fsync_write(tmp / MANIFEST, json.dumps(manifest).encode())
+    publish_dir(tmp, Path(dirpath))
+    return PartitionArtifact(dirpath)
 
 
 def load_artifact(dirpath: str | os.PathLike) -> "PartitionArtifact":
@@ -240,8 +422,11 @@ class PartitionArtifact:
                 self.num_vertices, self.num_partitions).astype(bool)
         return self._cache["vparts"]
 
-    def result(self) -> PartitionResult:
+    def result(self):
         """Reconstruct the :class:`PartitionResult` (bit-identical)."""
+        # lazy: keep the artifact store importable without jax
+        from repro.core.partitioner import PartitionResult
+
         return PartitionResult(self.edge_part, self.vparts,
                                self.edges_per_part.copy(), self.rounds,
                                self.leftover)
@@ -257,5 +442,7 @@ class PartitionArtifact:
                                    self.num_vertices, d)
 
 
-__all__ = ["ARTIFACT_VERSION", "PartitionArtifact", "load_artifact",
-           "save_artifact"]
+__all__ = ["ARTIFACT_VERSION", "PartitionArtifact",
+           "begin_shared_artifact", "encode_shared_parts", "load_artifact",
+           "publish_shared_artifact", "save_artifact",
+           "write_artifact_contrib"]

@@ -343,7 +343,132 @@ def exchange_read_global(exchange_dir: str | os.PathLike, num_hosts: int,
             np.concatenate(dev) if dev else np.zeros((0,), np.int32))
 
 
+def shard_eids(exchange_dir: str | os.PathLike, num_hosts: int,
+               devices: list,
+               ) -> dict[int, np.ndarray]:
+    """Global edge ids of each requested device's shard, in slot order.
+
+    Because host ranges tile the block index in order, shard ``d`` holds
+    the file-order subsequence of edges hashing to ``d`` — so its slot
+    ``k`` is the ``k``-th such edge.  Streams one host's ``.dev`` spill
+    at a time: peak memory O(max range + requested shards), never O(M).
+    The sharded finalize epilogue maps its owned slices back to edge
+    identity with this instead of ``exchange_read_global``.
+    """
+    exchange_dir = os.fspath(exchange_dir)
+    per_host = exchange_counts(exchange_dir, num_hosts)
+    out: dict[int, list] = {d: [] for d in devices}
+    off = 0
+    for h in range(num_hosts):
+        kh = int(per_host[h].sum())
+        dev = _read_raw(os.path.join(exchange_dir, f"h{h:03d}.dev"),
+                        np.int32, (kh,))
+        for d in devices:
+            out[d].append(np.flatnonzero(dev == d).astype(np.int64) + off)
+        off += kh
+    return {d: (np.concatenate(c) if c else np.zeros((0,), np.int64))
+            for d, c in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# elastic resume: reshard edge_part slices onto a different device count
+# ---------------------------------------------------------------------------
+#
+# A snapshot stores edge_part as one slice per *device* of the run that
+# took it.  Restoring onto the same global device count only moves slice
+# ownership between processes (the shard layout is a pure function of the
+# 2D hash), but a different device count re-hashes every edge to a new
+# shard — the slices must be resharded.  Like ingestion, this runs as a
+# store-backed exchange so no process ever holds the global assignment:
+#
+#   every host:  reshard_write    — stream the exchange ranges in file
+#                                   order, recompute the OLD device of
+#                                   every edge (grid_assign_host is
+#                                   deterministic), walk a cursor through
+#                                   the old slices this host was assigned
+#                                   (old shard i → host i % H), and spill
+#                                   (eid, value) pairs per NEW device.
+#   <barrier>                       all pairs durably staged
+#   every host:  reshard_assemble — for each owned new device, merge all
+#                                   hosts' pairs by eid; ascending eid IS
+#                                   slot order, so the values drop into
+#                                   the new padded slice directly.
+#
+# Peak memory per process: O(m/H) during write, O(owned shards) during
+# assembly.  Per-eid values are preserved exactly, so resuming on the
+# same device count remains bit-identical and a fixed-point snapshot
+# reshards to the identical final assignment.
+
+def reshard_write(spill_dir: str | os.PathLike,
+                  exchange_dir: str | os.PathLike, num_hosts: int,
+                  old_slices: dict, d_old: int, d_new: int, host: int,
+                  salt: int = 0) -> None:
+    """Stage this host's share of an elastic reshard (see above).
+
+    ``old_slices[i]`` is the (cap_old,) assignment slice of *old* shard
+    ``i`` for each old shard assigned to this host (``i % num_hosts ==
+    host``) — the slices ``RunSnapshot.restore_state_multihost`` hands
+    back on a device-count mismatch.
+    """
+    spill_dir = os.fspath(spill_dir)
+    os.makedirs(spill_dir, exist_ok=True)
+    per_host = exchange_counts(exchange_dir, num_hosts)
+    mine = sorted(old_slices)
+    cursors = {i: 0 for i in mine}
+    acc: dict[int, list] = {d: [] for d in range(d_new)}
+    off = 0
+    for h in range(num_hosts):
+        kh = int(per_host[h].sum())
+        flat = _read_raw(os.path.join(os.fspath(exchange_dir),
+                                      f"h{h:03d}.edges"), np.int32, (kh, 2))
+        dev_new = _read_raw(os.path.join(os.fspath(exchange_dir),
+                                         f"h{h:03d}.dev"), np.int32, (kh,))
+        dev_old = grid_assign_host(flat, d_old, salt=salt)
+        for i in mine:
+            sel = np.flatnonzero(dev_old == i)
+            k = sel.size
+            vals = np.asarray(old_slices[i])[cursors[i]:cursors[i] + k]
+            cursors[i] += k
+            dn = dev_new[sel]
+            eids = sel.astype(np.int64) + off
+            for d in np.unique(dn):
+                pick = dn == d
+                pair = np.empty((int(pick.sum()), 2), np.int64)
+                pair[:, 0] = eids[pick]
+                pair[:, 1] = vals[pick]
+                acc[int(d)].append(pair)
+        off += kh
+    for d in range(d_new):
+        arr = (np.concatenate(acc[d]) if acc[d]
+               else np.zeros((0, 2), np.int64))
+        _write_raw(os.path.join(spill_dir, f"h{host:03d}_d{d:03d}.pairs"),
+                   arr)
+
+
+def reshard_assemble(spill_dir: str | os.PathLike, num_hosts: int,
+                     owned_new: list, cap_new: int) -> dict:
+    """Assemble the owned *new* slices from every host's staged pairs
+    (after the cross-process barrier).  Unfilled tail slots stay -1,
+    matching the padded shard convention."""
+    spill_dir = os.fspath(spill_dir)
+    out: dict[int, np.ndarray] = {}
+    for d in owned_new:
+        chunks = []
+        for h in range(num_hosts):
+            path = os.path.join(spill_dir, f"h{h:03d}_d{d:03d}.pairs")
+            chunks.append(_read_raw(path, np.int64,
+                                    (os.path.getsize(path) // 16, 2)))
+        pairs = (np.concatenate(chunks) if chunks
+                 else np.zeros((0, 2), np.int64))
+        order = np.argsort(pairs[:, 0], kind="stable")
+        sl = np.full((cap_new,), -1, np.int32)
+        sl[: pairs.shape[0]] = pairs[order, 1].astype(np.int32)
+        out[d] = sl
+    return out
+
+
 __all__ = ["exchange_assemble", "exchange_counts", "exchange_read_global",
            "exchange_write_range", "host_block_ranges", "ingest_edgefile",
            "ingest_host_range", "my_block_range", "process_info",
-           "range_flat_edges"]
+           "range_flat_edges", "reshard_assemble", "reshard_write",
+           "shard_eids"]

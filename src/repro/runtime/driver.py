@@ -25,10 +25,20 @@ presume:
   through :class:`repro.runtime.snapshot.RunSnapshot` (sharded files,
   fsync + atomic rename, config/graph fingerprints).  Resume against the
   wrong EdgeFile or NEConfig fails loudly;
-* **finalize** — stitch shard-order assignments back to edge order, run
-  the shared water-filling cleanup, hand back the standard
-  :class:`PartitionResult`; optionally persist it as a
-  :mod:`repro.runtime.artifact` for the GAS / GNN consumers.
+* **finalize** — single-controller runs stitch shard-order assignments
+  back to edge order and run the shared water-filling cleanup; a
+  multi-controller run finalizes **sharded**: each host cleans up only
+  its owned slices (:mod:`repro.runtime.finalize`), the quality metrics
+  combine from (P,)-sized partials via :mod:`repro.dist.compat`
+  collectives, the artifact persists through the cooperative multi-writer
+  protocol (:mod:`repro.runtime.artifact`), and the returned
+  :class:`PartitionResult` carries a *lazy* ``edge_part`` — no host ever
+  materializes the O(M) global assignment unless a test or small-graph
+  consumer forces it;
+* **elastic resume** — restoring onto a different process count at the
+  same device count just moves slice ownership; a different *device*
+  count reshards the slices through a store-backed exchange
+  (:func:`repro.runtime.cluster.reshard_write`) instead of refusing.
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, as_graph, shard_edges
+from repro.core.metrics import stats_from_counts
 from repro.core.partitioner import (NEConfig, NEState, PartitionResult,
                                     alpha_limit, finalize_result, ne_done,
                                     ne_init_state, ne_round_step)
@@ -79,6 +90,7 @@ class PartitionDriver:
         self._done: bool | None = None
         self._host, self._nprocs = compat.process_env()
         self.multihost = self.mode == "spmd" and self._nprocs > 1
+        self._final_slices = None   # set by the sharded finalize epilogue
         # test-only crash-injection point for the multi-writer snapshot
         # protocol (see RunSnapshot.save_state_multihost / the kill-at-
         # round-k integration checks); never set in production runs
@@ -237,6 +249,7 @@ class PartitionDriver:
                 self.cfg, self.limit, self.n, self.mesh, self._u_sh,
                 self._v_sh, self._mask_sh, self.state))
         self._result = None
+        self._final_slices = None
         self._done = None
         if (self.snapshot is not None and self.snapshot_every
                 and self.rounds % self.snapshot_every == 0):
@@ -250,7 +263,13 @@ class PartitionDriver:
         return self.finalize()
 
     def finalize(self) -> PartitionResult:
-        """Stitch + cleanup epilogue; cached until the state advances."""
+        """Cleanup epilogue; cached until the state advances.
+
+        Single-controller: stitch + whole-array cleanup
+        (``finalize_result``).  Multi-controller: the sharded epilogue —
+        slice-local cleanup, collective metrics combine, lazy
+        ``edge_part`` (see :meth:`_finalize_multihost`).
+        """
         if self._result is not None:
             return self._result
         p_num = self.cfg.num_partitions
@@ -261,21 +280,85 @@ class PartitionDriver:
             return self._result
         if self.mode == "single":
             edge_part = self.state.edge_part
+        elif self.multihost:
+            self._result = self._finalize_multihost()
+            return self._result
         else:
-            if self.multihost:
-                from repro.runtime import multihost as mh
-
-                ep_sh = mh.gather_to_host(self.mesh, self.state.edge_part)
-                if self._dev is None:
-                    self._edges, self._dev = cluster.exchange_read_global(
-                        self._exchange_dir, self._nprocs)
-            else:
-                ep_sh = np.asarray(self.state.edge_part)
+            ep_sh = np.asarray(self.state.edge_part)
             edge_part = stitch_edge_part(ep_sh, self._dev, self.m)
         self._result = finalize_result(edge_part, self.state.vparts,
                                        self.state.edges_per_part,
                                        self._edges, self.cfg, self.rounds)
         return self._result
+
+    def _owned_host_slices(self, arr) -> dict:
+        """Host-side copies of the owned device slices of a (D, C) global
+        array — O(owned × C), never O(M)."""
+        slices = {}
+        for sh in arr.addressable_shards:
+            i = sh.index[0].start or 0
+            slices[int(i)] = np.array(sh.data)[0]
+        return slices
+
+    def _finalize_multihost(self) -> PartitionResult:
+        """The sharded finalize epilogue (see repro.runtime.finalize).
+
+        Every per-edge structure touched here is an owned-slice dict; the
+        only cross-host state is the sorted leftover-eid spills plus two
+        ``compat`` collectives (scalar leftover sum, O(N·P) replica OR).
+        The returned result's ``edge_part`` is lazy — forcing it is the
+        one deliberate O(M) gather, for small graphs and tests.
+        """
+        from repro.runtime import finalize as fz
+
+        p_num = self.cfg.num_partitions
+        ep = self._owned_host_slices(self.state.edge_part)
+        us = self._owned_host_slices(self._u_sh)
+        vs = self._owned_host_slices(self._v_sh)
+        eids = cluster.shard_eids(self._exchange_dir, self._nprocs,
+                                  self._owned)
+        counts = np.array(self.state.edges_per_part)       # replicated
+        vparts = np.array(self.state.vparts)               # replicated
+        rounds = self.rounds
+
+        fin_dir = os.path.join(self._exchange_dir, "finalize")
+        my_left = fz.stage_leftovers(fin_dir, self._host, ep, eids)
+        total = compat.all_processes_sum(my_left.size)
+        compat.barrier("finalize-leftovers")
+        take, _ = fz.apply_leftovers(
+            fin_dir, self._host, self._nprocs, my_left, ep, us, vs, eids,
+            counts, self.limit, p_num, vparts, leftover_total=total)
+        # metrics-combine: per-host replica deltas OR-merge (O(N·P)),
+        # counts update is the shared plan itself — no per-edge traffic
+        vparts = compat.all_processes_any(vparts)
+        counts = (counts.astype(np.int64) + take).astype(np.int32)
+        stats = stats_from_counts(vparts.sum(axis=0), counts, self.n)
+
+        self._final_slices = (ep, us, vs, eids)
+        # capture only what materialization needs — closing over the
+        # whole SpmdState would pin every device-side round array for
+        # the lifetime of the result
+        mesh, ep_global = self.mesh, self.state.edge_part
+        exchange_dir, nprocs, m = self._exchange_dir, self._nprocs, self.m
+
+        def materialize() -> np.ndarray:
+            if os.environ.get("REPRO_FORBID_EDGE_PART_MATERIALIZE"):
+                raise RuntimeError(
+                    "REPRO_FORBID_EDGE_PART_MATERIALIZE is set: the "
+                    "multi-process epilogue must never materialize the "
+                    "O(M) global edge assignment")
+            from repro.runtime import multihost as mh
+
+            ep_sh = mh.gather_to_host(mesh, ep_global)
+            _, dev = cluster.exchange_read_global(exchange_dir, nprocs)
+            full = stitch_edge_part(ep_sh, dev, m)
+            left_eids, left_tgt = fz.leftover_assignments(fin_dir, nprocs,
+                                                          take)
+            full[left_eids] = left_tgt
+            return full
+
+        return PartitionResult(materialize, vparts, counts, rounds,
+                               int(total), stats)
 
     # -- snapshots ----------------------------------------------------------
 
@@ -331,25 +414,48 @@ class PartitionDriver:
             have = tuple(fields["edge_part"].shape)
             expect = tuple(self._mask_sh.shape)
             if have != expect:
-                raise SnapshotMismatch(
-                    f"snapshot edge_part shard layout {have} != current "
-                    f"{expect} — resume needs the same device count")
+                # elastic resume: the snapshot was taken on a different
+                # device count — reshard the slices onto the current
+                # layout instead of refusing (single-controller, so the
+                # in-memory stitch + re-split is the honest path)
+                fields["edge_part"] = self._reshard_in_memory(
+                    np.asarray(fields["edge_part"]))
         self.state = cls(**{k: jnp.asarray(fields[k]) for k in want})
         self._result = None
+        self._final_slices = None
         self._done = None
         return rnd
+
+    def _reshard_in_memory(self, old: np.ndarray) -> np.ndarray:
+        """Single-controller elastic reshard: old (D_old, C_old) slices →
+        the current (D, C) layout, preserving every per-edge value.  The
+        shard layout is a pure function of the 2D hash, so the old
+        per-edge device map re-derives deterministically."""
+        from repro.io.csr import grid_assign_host
+
+        d_old = old.shape[0]
+        dev_old = grid_assign_host(self._edges, d_old)
+        full = stitch_edge_part(old, dev_old, self.m)
+        new = np.full(tuple(self._mask_sh.shape), -1, np.int32)
+        for d in range(new.shape[0]):
+            sel = np.flatnonzero(self._dev == d)
+            new[d, : sel.size] = full[sel]
+        return new
 
     def _restore_multihost(self, round_k: int | None) -> int:
         from repro.runtime import multihost as mh
 
+        load = dict(num_devices=self.num_devices, host=self._host,
+                    num_hosts=self._nprocs)
         fields, rnd, mode, counts = \
-            self.snapshot.restore_state_multihost(self._owned, round_k)
+            self.snapshot.restore_state_multihost(self._owned, round_k,
+                                                  **load)
         if round_k is None:
             agreed = compat.all_processes_min(rnd)
             if agreed != rnd:
                 fields, rnd, mode, counts = \
-                    self.snapshot.restore_state_multihost(self._owned,
-                                                          round_k=agreed)
+                    self.snapshot.restore_state_multihost(
+                        self._owned, round_k=agreed, **load)
         if mode != self.mode:
             raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "
                                    f"driver is {self.mode!r}")
@@ -357,25 +463,45 @@ class PartitionDriver:
         if missing:
             raise SnapshotMismatch(f"snapshot is missing fields {missing}")
         cap = int(self._mask_sh.shape[1])
-        if counts.get("edge_part") != self.num_devices:
-            raise SnapshotMismatch(
-                f"snapshot edge_part has {counts.get('edge_part')} shards, "
-                f"mesh has {self.num_devices} devices — resume needs the "
-                f"same device count")
-        for i, arr in fields["edge_part"].items():
-            if tuple(arr.shape) != (cap,):
-                raise SnapshotMismatch(
-                    f"snapshot edge_part shard {i} has shape {arr.shape} "
-                    f"!= current capacity ({cap},)")
-        edge_part = mh.global_shard_array(self.mesh, fields["edge_part"],
-                                          (cap,), np.int32)
+        d_old = counts.get("edge_part")
+        if d_old != self.num_devices:
+            # elastic resume onto a different device count: the loaded
+            # slices follow the balanced *old* layout — reshard them
+            # through the store-backed exchange (O(m/H) per process)
+            slices = self._reshard_multihost(fields["edge_part"], d_old,
+                                             cap, rnd)
+        else:
+            slices = fields["edge_part"]
+            for i, arr in slices.items():
+                if tuple(arr.shape) != (cap,):
+                    raise SnapshotMismatch(
+                        f"snapshot edge_part shard {i} has shape "
+                        f"{arr.shape} != current capacity ({cap},)")
+        edge_part = mh.global_shard_array(self.mesh, slices, (cap,),
+                                          np.int32)
         rep = {k: mh.replicate(self.mesh, fields[k])
                for k in SpmdState._fields if k != "edge_part"}
         self.state = SpmdState(edge_part=edge_part, **rep)
         self._result = None
+        self._final_slices = None
         self._done = None
         compat.barrier(f"resume-{rnd}")
         return rnd
+
+    def _reshard_multihost(self, old_slices: dict, d_old: int, cap: int,
+                           rnd: int) -> dict:
+        """Elastic multihost reshard: stage my old slices' (eid, value)
+        pairs per new device, barrier, assemble my owned new slices —
+        see ``repro.runtime.cluster.reshard_write``."""
+        spill = os.path.join(self._exchange_dir,
+                             f"reshard_{rnd:010d}_{d_old}to"
+                             f"{self.num_devices}")
+        cluster.reshard_write(spill, self._exchange_dir, self._nprocs,
+                              old_slices, d_old, self.num_devices,
+                              self._host)
+        compat.barrier(f"reshard-{rnd}")
+        return cluster.reshard_assemble(spill, self._nprocs, self._owned,
+                                        cap)
 
     @classmethod
     def resume(cls, source, cfg: NEConfig,
@@ -392,11 +518,57 @@ class PartitionDriver:
     # -- durable output -----------------------------------------------------
 
     def save_artifact(self, dirpath: str | os.PathLike) -> PartitionArtifact:
-        """Finalize and persist the run's output as a partition artifact."""
+        """Finalize and persist the run's output as a partition artifact.
+
+        Multi-controller runs go through the cooperative multi-writer
+        protocol: every process calls this, each writes only its owned
+        slices' shards, and the published bytes are identical to a
+        single-writer save of the same result (no host ever holds the
+        global assignment).
+        """
         res = self.finalize()
+        if self.multihost:
+            return self._save_artifact_multihost(dirpath, res)
         return save_artifact(dirpath, res, self._edges, self.n,
                              config_fingerprint=config_fingerprint(self.cfg),
                              graph_fingerprint=self._graph_fp)
+
+    def _save_artifact_multihost(self, dirpath, res) -> PartitionArtifact:
+        from repro.runtime import artifact as art
+        from repro.runtime import finalize as fz
+
+        p_num = self.cfg.num_partitions
+        if self._final_slices is None:
+            # m == 0: finalize took the eager empty-result path, nothing
+            # is sharded — writer-0 runs the single-writer save
+            if self._host == 0:
+                save_artifact(
+                    dirpath, res, np.zeros((0, 2), np.int32), self.n,
+                    config_fingerprint=config_fingerprint(self.cfg),
+                    graph_fingerprint=self._graph_fp)
+            compat.barrier("artifact-empty")
+            return PartitionArtifact(dirpath)
+        ep, us, vs, eids = self._final_slices
+        if self._host == 0:
+            art.begin_shared_artifact(dirpath)
+        compat.barrier("artifact-begin")
+        contribs = fz.partition_contribs(ep, us, vs, eids, p_num)
+        art.write_artifact_contrib(dirpath, self._host, contribs)
+        compat.barrier("artifact-contrib")
+        owned_parts = list(range(self._host, p_num, self._nprocs))
+        art.encode_shared_parts(dirpath, self._host, owned_parts,
+                                self._nprocs)
+        compat.barrier("artifact-encode")
+        if self._host == 0:
+            art.publish_shared_artifact(
+                dirpath, num_vertices=self.n, num_edges=self.m,
+                num_partitions=p_num, num_hosts=self._nprocs,
+                vparts=res.vparts, edges_per_part=res.edges_per_part,
+                rounds=res.rounds, leftover=res.leftover,
+                config_fingerprint=config_fingerprint(self.cfg),
+                graph_fingerprint=self._graph_fp)
+        compat.barrier("artifact-publish")
+        return PartitionArtifact(dirpath)
 
 
 __all__ = ["PartitionDriver"]

@@ -315,13 +315,25 @@ class RunSnapshot:
 
     def restore_state_multihost(self, owned: list[int],
                                 round_k: int | None = None,
+                                num_devices: int | None = None,
+                                host: int = 0, num_hosts: int = 1,
                                 ) -> tuple[dict, int, str, dict]:
         """Like :meth:`restore_state`, but loads only the ``owned`` slices
         of each sharded array: sharded names map to ``{index: array}``
         instead of the stacked (D, …) array.  Also returns the global shard
         counts so the caller can validate the device layout.  Torn steps
         (unpublished staging, checksum mismatch) fall back to the previous
-        published round, exactly as in the single-process path."""
+        published round, exactly as in the single-process path.
+
+        **Elastic resume**: when ``num_devices`` is given and a stored
+        shard count differs from it, the snapshot was taken on a different
+        device count.  Instead of refusing, this process loads the slices
+        of a balanced *old-layout* assignment (old shard ``i`` → host
+        ``i % num_hosts``) so the caller can reshard them onto the new
+        layout (``repro.runtime.cluster.reshard_write``/``_assemble``) —
+        the returned ``counts`` expose the mismatch.  Without
+        ``num_devices`` an out-of-range ``owned`` index still raises
+        :class:`SnapshotMismatch` (the pre-elastic contract)."""
         candidates = ([round_k] if round_k is not None
                       else list(reversed(self.mgr.steps())))
         last_err: Exception | None = None
@@ -332,18 +344,26 @@ class RunSnapshot:
                 fields = dict(self.mgr._load_flat(step))
                 counts = {}
                 for name in self.mgr.shard_names(step):
-                    counts[name] = self.mgr.shard_count(step, name)
-                    bad = [i for i in owned if i >= counts[name]]
-                    if bad:
-                        # a config problem, not corruption: falling back
-                        # (or a raw IndexError escaping mid-collective)
-                        # must not mask a device-count change
-                        raise SnapshotMismatch(
-                            f"snapshot {name} has {counts[name]} shards; "
-                            f"this process owns indices {bad} — resume "
-                            f"needs the same device count")
+                    counts[name] = n_sh = self.mgr.shard_count(step, name)
+                    if num_devices is not None and n_sh != num_devices:
+                        # elastic: balanced old-layout assignment
+                        mine = [i for i in range(n_sh)
+                                if i % num_hosts == host]
+                    else:
+                        bad = [i for i in owned if i >= n_sh]
+                        if bad:
+                            # a config problem, not corruption: falling
+                            # back (or a raw IndexError escaping
+                            # mid-collective) must not mask a
+                            # device-count change
+                            raise SnapshotMismatch(
+                                f"snapshot {name} has {n_sh} shards; "
+                                f"this process owns indices {bad} — "
+                                f"resume needs the same device count "
+                                f"(or an elastic caller)")
+                        mine = owned
                     fields[name] = {i: self.mgr.load_shard(step, name, i)
-                                    for i in owned}
+                                    for i in mine}
             except SnapshotMismatch:
                 raise
             except (IOError, json.JSONDecodeError, ValueError, KeyError) as e:

@@ -1,23 +1,35 @@
-"""Multi-controller integration checks: 2 real processes x 4 devices each.
+"""Multi-controller integration checks: N real processes x 8/N devices.
 
 Drives ``scripts/launch_multihost.py`` (the exact entrypoint CI documents)
 through the full failure matrix against a single-process 8-device
 reference computed in this interpreter:
 
-  A. uninterrupted 2-process run        -> bit-identical to partition_spmd
+  A. uninterrupted N-process run         -> bit-identical to partition_spmd
   B. kill worker 1 after the round-k snapshot published (job dies)
-  C. resume B                           -> bit-identical, from round k
+  C. resume B                            -> bit-identical, from round k
   D. kill worker 1 mid-save (shards staged, never published)
-  E. resume D                           -> bit-identical, from round k-1
-                                           (the torn round is skipped)
-  F. single-process driver resumes A's 2-process snapshots (cross
+  E. resume D                            -> bit-identical, from round k-1
+                                            (the torn round is skipped)
+  F. single-process driver resumes A's N-process snapshots (cross
      process-count restore compatibility)
+  G. sharded finalize + cooperative artifact save, with edge_part
+     materialization FORBIDDEN (env) -> the run completes and the
+     artifact bytes are identical to a single-process save_artifact
+  H. elastic resume of B's snapshots on the OTHER process count (2<->4,
+     same 8 global devices) -> bit-identical, from round k
+  I. elastic resume of A's snapshots on HALF the devices (8 -> 4,
+     store-backed reshard) -> bit-identical final result
+
+The process count comes from --procs / $MULTIHOST_PROCS (default 2; CI
+runs a {2, 4} matrix) and the RMAT scale from --scale /
+$MULTIHOST_SCALE (default 10; the nightly job runs 16).
 
 Prints one ``RESULT {json}`` line and exits nonzero if any bit-identity
 or protocol check fails, so it gates CI when run directly; the pytest
 wrapper (tests/test_multihost.py, ``-m multihost``) asserts the same
 fields for local runs.
 """
+import argparse
 import os
 
 os.environ["XLA_FLAGS"] = (
@@ -38,21 +50,48 @@ ROOT = Path(__file__).resolve().parents[2]
 SCRIPT = ROOT / "scripts" / "launch_multihost.py"
 sys.path.insert(0, str(ROOT / "src"))
 
+ap = argparse.ArgumentParser()
+ap.add_argument(
+    "--procs", type=int, default=int(os.environ.get("MULTIHOST_PROCS", "2"))
+)
+ap.add_argument(
+    "--scale", type=int, default=int(os.environ.get("MULTIHOST_SCALE", "10"))
+)
+cli = ap.parse_args()
+
 import jax  # noqa: E402
 
-from repro.core import NEConfig  # noqa: E402
+from repro.core import NEConfig, evaluate  # noqa: E402
 from repro.dist.partitioner_sm import partition_spmd  # noqa: E402
 from repro.io.spill import spill_canonical_rmat  # noqa: E402
-from repro.runtime import PartitionDriver  # noqa: E402
+from repro.runtime import PartitionDriver, save_artifact  # noqa: E402
+from repro.runtime.snapshot import config_fingerprint  # noqa: E402
+from repro.runtime.snapshot import graph_fingerprint  # noqa: E402
 
-SCALE, EDGE_FACTOR = 10, 8
+SCALE, EDGE_FACTOR = cli.scale, 8
+PROCS = cli.procs
+PROCS_ALT = 4 if PROCS == 2 else 2  # the elastic process-count twin
+if 8 % PROCS or 8 % PROCS_ALT:
+    raise SystemExit(f"--procs {PROCS} does not divide the 8-device mesh")
 CFG = NEConfig(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
 
-out = {"devices": len(jax.devices())}
+out = {"devices": len(jax.devices()), "procs": PROCS, "scale": SCALE}
 
 
-def launch(td, name, extra, expect_fail=False):
+def launch(
+    td,
+    name,
+    extra,
+    expect_fail=False,
+    procs=None,
+    devices=None,
+    with_out=True,
+    env_extra=None,
+):
     """One parent invocation of the launcher; returns (rc, out_dir)."""
+    procs = procs or PROCS
+    if devices is None:
+        devices = 8 // procs
     out_dir = td / f"out_{name}"
     args = [
         sys.executable,
@@ -68,9 +107,9 @@ def launch(td, name, extra, expect_fail=False):
         "--edge-chunk",
         str(1 << 12),
         "--num-processes",
-        "2",
+        str(procs),
         "--devices-per-process",
-        "4",
+        str(devices),
         "--keep",
         "100000",
         "--log-dir",
@@ -79,12 +118,14 @@ def launch(td, name, extra, expect_fail=False):
         "900",
         *extra,
     ]
-    if not expect_fail:
+    if with_out and not expect_fail:
         args += ["--out", str(out_dir)]
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")
+    if env_extra:
+        env.update(env_extra)
     proc = subprocess.run(
-        args, capture_output=True, text=True, timeout=1200, env=env
+        args, capture_output=True, text=True, timeout=1800, env=env
     )
     if not expect_fail and proc.returncode != 0:
         print(proc.stdout[-4000:], file=sys.stderr)
@@ -107,6 +148,14 @@ def identical(res, ref):
     )
 
 
+def dirs_identical(a: Path, b: Path) -> bool:
+    names_a = sorted(p.name for p in a.iterdir())
+    names_b = sorted(p.name for p in b.iterdir())
+    if names_a != names_b:
+        return False
+    return all((a / n).read_bytes() == (b / n).read_bytes() for n in names_a)
+
+
 with tempfile.TemporaryDirectory() as _td:
     td = Path(_td)
     ef = spill_canonical_rmat(
@@ -120,7 +169,7 @@ with tempfile.TemporaryDirectory() as _td:
     k = max(int(ref.rounds) // 2, 1)
     out["kill_round"] = k
 
-    # A: uninterrupted 2-process run
+    # A: uninterrupted N-process run
     _, out_a = launch(
         td,
         "A",
@@ -130,6 +179,21 @@ with tempfile.TemporaryDirectory() as _td:
     out["multihost_matches_spmd"] = identical(res_a, ref)
     out["multihost_rounds"] = int(res_a["rounds"])
     out["round_secs_mean"] = float(np.mean(timing_a["round_secs"][1:]))
+
+    # the sharded epilogue's collective-combined metrics == evaluate()
+    # of the reference assignment
+    ref_stats = evaluate(
+        ef.read_all(),
+        np.asarray(ref.edge_part),
+        int(ef.num_vertices),
+        CFG.num_partitions,
+    )
+    rf_got = timing_a.get("replication_factor", -1.0)
+    eb_got = timing_a.get("edge_balance", -1.0)
+    out["stats_match"] = bool(
+        abs(rf_got - ref_stats.replication_factor) < 1e-12
+        and abs(eb_got - ref_stats.edge_balance) < 1e-12
+    )
 
     # B: worker 1 dies right after the round-k snapshot publishes
     rc_b, _ = launch(
@@ -199,12 +263,69 @@ with tempfile.TemporaryDirectory() as _td:
     out["torn_resume_round"] = timing_e.get("resume_round")
     out["torn_resume_identical"] = identical(res_e, ref)
 
-    # F: single-process driver restores the 2-process snapshots
+    # F: single-process driver restores the N-process snapshots
     drv = PartitionDriver.resume(ef, CFG, td / "snapA")
     res_f = drv.run()
     out["crossproc_restore_identical"] = bool(
         (res_f.edge_part == ref.edge_part).all()
         and (res_f.vparts == ref.vparts).all()
+    )
+
+    # G: sharded finalize end to end with materialization FORBIDDEN —
+    # the epilogue + cooperative artifact save must never touch the
+    # O(m) global assignment, and the published artifact must be
+    # byte-identical to a single-process save_artifact of the reference
+    art_ref = td / "art_ref"
+    save_artifact(
+        art_ref,
+        ref,
+        ef.read_all(),
+        int(ef.num_vertices),
+        config_fingerprint=config_fingerprint(CFG),
+        graph_fingerprint=graph_fingerprint(ef),
+    )
+    rc_g, _ = launch(
+        td,
+        "G",
+        [
+            "--snapshot-dir",
+            str(td / "snapG"),
+            "--artifact-out",
+            str(td / "art_mh"),
+        ],
+        with_out=False,
+        env_extra={"REPRO_FORBID_EDGE_PART_MATERIALIZE": "1"},
+    )
+    out["epilogue_no_gather"] = rc_g == 0
+    out["artifact_bit_identical"] = dirs_identical(art_ref, td / "art_mh")
+
+    # H: elastic process-count resume — B's snapshots (killed at k, PROCS
+    # writers) restored by PROCS_ALT processes on the same 8 devices
+    _, out_h = launch(
+        td,
+        "H",
+        ["--snapshot-dir", str(td / "snapB"), "--resume"],
+        procs=PROCS_ALT,
+    )
+    res_h, timing_h = load(out_h)
+    out["elastic_resume_round"] = timing_h.get("resume_round")
+    out["elastic_procs_identical"] = bool(
+        identical(res_h, ref) and timing_h.get("resume_round") == k
+    )
+
+    # I: elastic device-count resume — A's fixed-point snapshots (8
+    # shards) restored on a 4-device mesh; the store-backed reshard must
+    # preserve every per-edge value, so the final result is identical
+    _, out_i = launch(
+        td,
+        "I",
+        ["--snapshot-dir", str(td / "snapA"), "--resume"],
+        devices=4 // PROCS,
+    )
+    res_i, _timing_i = load(out_i)
+    out["elastic_reshard_identical"] = bool(
+        (res_i["edge_part"] == np.asarray(ref.edge_part)).all()
+        and (res_i["vparts"] == np.asarray(ref.vparts)).all()
     )
     ef.close()
 
@@ -217,6 +338,7 @@ out["torn_round_skipped"] = (
 
 CHECKS = [
     "multihost_matches_spmd",
+    "stats_match",
     "kill_job_failed",
     "kill_resume_round_correct",
     "kill_resume_identical",
@@ -224,6 +346,10 @@ CHECKS = [
     "torn_round_skipped",
     "torn_resume_identical",
     "crossproc_restore_identical",
+    "epilogue_no_gather",
+    "artifact_bit_identical",
+    "elastic_procs_identical",
+    "elastic_reshard_identical",
 ]
 out["ok"] = all(out[c] for c in CHECKS)
 print("RESULT " + json.dumps(out))

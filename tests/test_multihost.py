@@ -73,3 +73,36 @@ def test_cross_process_count_restore(mh_results):
     """A single-process driver restores 2-process snapshots (same byte
     format, shards stacked back transparently)."""
     assert mh_results["crossproc_restore_identical"]
+
+
+def test_sharded_finalize_never_materializes(mh_results):
+    """A full run + cooperative artifact save completes with the O(m)
+    edge_part materialization forbidden (REPRO_FORBID_EDGE_PART_MATERIALIZE)
+    — the multi-process epilogue has no global-gather code path left."""
+    assert mh_results["epilogue_no_gather"]
+
+
+def test_multiwriter_artifact_bit_identical(mh_results):
+    """The cooperatively-written artifact (each host writing only its
+    slices' shards) is byte-identical to a single-process save_artifact:
+    same files, same checksums, same manifest."""
+    assert mh_results["artifact_bit_identical"]
+
+
+def test_distributed_metrics_match_evaluate(mh_results):
+    """Replication factor / edge balance from the sharded epilogue's
+    (P,)-sized partials equal evaluate() of the full assignment."""
+    assert mh_results["stats_match"]
+
+
+def test_elastic_process_count_resume(mh_results):
+    """Snapshots written by N processes resume bit-identically on the
+    other process count (2<->4) over the same 8 global devices."""
+    assert mh_results["elastic_procs_identical"]
+
+
+def test_elastic_device_count_reshard(mh_results):
+    """Restoring onto a different device count reshards the edge_part
+    slices through the store-backed exchange instead of refusing, and
+    preserves every per-edge assignment."""
+    assert mh_results["elastic_reshard_identical"]
