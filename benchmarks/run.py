@@ -18,7 +18,8 @@ import sys
 import traceback
 
 
-SMOKE_SUITES = ("theory", "memory", "spmd", "runtime")  # tiny CI drift gate
+SMOKE_SUITES = ("theory", "memory", "spmd", "runtime",
+                "kernels")  # tiny CI drift gate
 
 
 def main() -> None:
@@ -30,6 +31,9 @@ def main() -> None:
     ap.add_argument("--csv", default=None,
                     help="also write the result rows to this CSV file "
                          "(written even when suites fail)")
+    ap.add_argument("--json", default=None,
+                    help="also write the result rows as a JSON list "
+                         "(the committed BENCH_*.json format)")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -55,7 +59,8 @@ def main() -> None:
                                               smoke=args.smoke),
         "apps": lambda: bench_apps.main(fast=args.fast),
         "roads": lambda: bench_roads.main(fast=args.fast),
-        "kernels": lambda: bench_kernels.main(fast=args.fast),
+        "kernels": lambda: bench_kernels.main(fast=args.fast,
+                                              smoke=args.smoke),
     }
     if args.only is not None and args.only not in suites:
         print(f"unknown suite {args.only!r}; known: {sorted(suites)}",
@@ -84,6 +89,14 @@ def main() -> None:
             f.write("name,us_per_call,derived\n")
             for name, us, derived in ROWS:
                 f.write(f"{name},{us:.1f},{derived}\n")
+    if args.json:
+        import json
+
+        with open(args.json, "w") as f:
+            json.dump([{"name": name, "us_per_call": round(us, 1),
+                        "derived": derived}
+                       for name, us, derived in ROWS], f, indent=2)
+            f.write("\n")
     if not ran:
         print("no suites selected — selection bug, not success",
               file=sys.stderr)

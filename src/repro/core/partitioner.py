@@ -35,6 +35,7 @@ from repro.core.epilogue import (alpha_limit, cleanup_leftovers,  # noqa: F401 â
                                  leftover_plan, leftover_targets)
 from repro.core.graph import Graph, as_graph, exclusive_rank
 from repro.core.metrics import stats_from_counts
+from repro.kernels.ne_round import ops as ne_ops
 
 Array = jax.Array
 I32_INF = np.iinfo(np.int32).max
@@ -53,11 +54,19 @@ class NEConfig:
     edge_chunk: int = 1 << 18   # edges per two-hop intersection chunk
     two_hop: bool = True        # Condition (5) allocation on/off (ablation)
     seed: int = 0
+    # Fused ne_round kernels for the round hot path (and bit-packed
+    # replica sets in the SPMD partitioner).  None resolves from the
+    # REPRO_NE_KERNELS env var at construction, so a resolved config is
+    # self-contained and its snapshot fingerprint stable.  Both values
+    # produce bit-identical results (asserted in tests).
+    use_pallas: bool = None
 
     def __post_init__(self):
         assert self.num_partitions >= 1
         assert self.alpha > 1.0
         assert 0.0 < self.lam <= 1.0
+        if self.use_pallas is None:
+            object.__setattr__(self, "use_pallas", ne_ops.env_enabled())
 
     def clamped(self, num_vertices: int) -> "NEConfig":
         return dataclasses.replace(self, k_sel=min(self.k_sel, num_vertices))
@@ -120,10 +129,24 @@ def priority_enc(count: Array, p: Array, num_partitions: int) -> Array:
     return jnp.minimum(count, cap) * num_partitions + p
 
 
+def boundary_reseed(degree_rest, keys_c):
+    """Random re-seed draw for empty boundaries (paper Alg. 1 line 6).
+
+    Hoisted out of :func:`select_chunk` so the fused Pallas selection
+    kernel can consume the identical jax.random bits without reproducing
+    the PRNG inside the kernel.  Returns ``(rnd_v, any_ok)``: (C,) random
+    vertices with unallocated edges and the scalar any-rest flag.
+    """
+    n = degree_rest.shape[0]
+    any_rest = degree_rest > 0
+    gumb = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(keys_c)
+    rnd_v = jnp.argmax(jnp.where(any_rest[None, :], gumb, -1.0), axis=1)
+    return rnd_v, any_rest.any()
+
+
 def select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
                  remaining_c):
     """Selection for a chunk of partitions.  vparts_c: (C, N) bool."""
-    n = degree_rest.shape[0]
     bnd = vparts_c & (degree_rest > 0)[None, :] & active_c[:, None]   # (C,N)
     bsize = bnd.sum(axis=1)                                            # (C,)
     # k_eff = clamp(ceil(Î»|B_p|), 1, K)   (paper Alg. 4 line 5)
@@ -139,10 +162,8 @@ def select_chunk(vparts_c, active_c, degree_rest, lam, k_sel, keys_c,
     fits = jnp.cumsum(cost, axis=1) <= remaining_c[:, None]
     valid &= fits | (jnp.arange(k_sel)[None, :] == 0)
     # Random re-seed when the boundary is empty (paper Alg. 1 line 6).
-    any_rest = degree_rest > 0
-    gumb = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(keys_c)
-    rnd_v = jnp.argmax(jnp.where(any_rest[None, :], gumb, -1.0), axis=1)
-    restart = (bsize == 0) & active_c & any_rest.any()
+    rnd_v, any_ok = boundary_reseed(degree_rest, keys_c)
+    restart = (bsize == 0) & active_c & any_ok
     first = jnp.where(restart, rnd_v.astype(jnp.int32), idx[:, 0])
     idx = idx.at[:, 0].set(first)
     valid = valid.at[:, 0].set(jnp.where(restart, True, valid[:, 0]))
@@ -175,9 +196,19 @@ def vertex_claims(cfg: NEConfig, limit: int, vparts: Array,
 
     remaining = jnp.pad(limit - edges_per_part, (0, p_pad - p_num))
 
-    def sel(args):
-        pc, ac, kc, rc = args
-        return select_chunk(pc, ac, degree_rest, cfg.lam, cfg.k_sel, kc, rc)
+    if cfg.use_pallas:
+        # fused kernel path: identical PRNG draw outside, fused masked
+        # top-k + capacity prefix inside (bit-identical â€” see ne_round)
+        def sel(args):
+            pc, ac, kc, rc = args
+            rnd_v, any_ok = boundary_reseed(degree_rest, kc)
+            return ne_ops.select_topk(pc, ac, degree_rest, cfg.lam,
+                                      cfg.k_sel, rc, rnd_v, any_ok)
+    else:
+        def sel(args):
+            pc, ac, kc, rc = args
+            return select_chunk(pc, ac, degree_rest, cfg.lam, cfg.k_sel,
+                                kc, rc)
 
     sel_idx, sel_valid = jax.lax.map(
         sel,
@@ -190,6 +221,9 @@ def vertex_claims(cfg: NEConfig, limit: int, vparts: Array,
     sel_valid = sel_valid.reshape(p_pad, cfg.k_sel)[:p_num]
 
     # --- vertex-grain claims (paper Alg. 3) --------------------------------
+    if cfg.use_pallas:
+        return ne_ops.claim_scatter(sel_idx, sel_valid, edges_per_part,
+                                    n, p_num)
     part_of_row = jnp.broadcast_to(
         jnp.arange(p_num, dtype=jnp.int32)[:, None], sel_idx.shape)
     claim_keys = priority_enc(edges_per_part[part_of_row.ravel()],
@@ -209,18 +243,26 @@ def _round(g: Graph, cfg: NEConfig, limit: int, state: NEState) -> NEState:
                                state.edges_per_part, sub)
 
     # --- one-hop allocation ------------------------------------------------
-    slot_key = vclaim_key[g.slot_src]
-    slot_ok = (slot_key < I32_INF) & (state.edge_part[g.adj_eid] < 0)
-    slot_key = jnp.where(slot_ok, slot_key, I32_INF)
-    ekey = jax.ops.segment_min(slot_key, g.adj_eid, num_segments=m)
-    new1 = ekey < I32_INF
-    part1 = jnp.where(new1, ekey % p_num, -1)
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    if cfg.use_pallas:
+        # fused edge-block kernel: one pass over M edges replaces the
+        # five gather/scatter passes over 2M CSR slots below (min over
+        # an edge's two directed slots == min(vclaim[u], vclaim[v]))
+        part1, counts1 = ne_ops.one_hop(vclaim_key, u, v, state.edge_part,
+                                        p_num)
+        new1 = part1 >= 0
+    else:
+        slot_key = vclaim_key[g.slot_src]
+        slot_ok = (slot_key < I32_INF) & (state.edge_part[g.adj_eid] < 0)
+        slot_key = jnp.where(slot_ok, slot_key, I32_INF)
+        ekey = jax.ops.segment_min(slot_key, g.adj_eid, num_segments=m)
+        new1 = ekey < I32_INF
+        part1 = jnp.where(new1, ekey % p_num, -1)
+        counts1 = jnp.zeros((p_num,), jnp.int32).at[
+            jnp.where(new1, part1, 0)].add(new1.astype(jnp.int32))
 
     edge_part = jnp.where(new1, part1, state.edge_part)
-    u, v = g.edges[:, 0], g.edges[:, 1]
     add_row = jnp.where(new1, part1, 0)
-    counts1 = jnp.zeros((p_num,), jnp.int32).at[add_row].add(
-        new1.astype(jnp.int32))
     vparts = state.vparts
     drop_u = jnp.where(new1, u, n)
     drop_v = jnp.where(new1, v, n)

@@ -15,8 +15,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["all_processes_any", "all_processes_min", "all_processes_sum",
-           "barrier", "make_mesh", "process_env", "pvary", "set_mesh",
-           "shard_map"]
+           "barrier", "make_mesh", "or_all_reduce", "process_env", "pvary",
+           "set_mesh", "shard_map"]
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -36,6 +36,36 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
     # check_vma path above keeps the caller's setting.
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=False)
+
+
+def or_all_reduce(x, axis_name, num_devices: int):
+    """Bitwise-OR all-reduce of an integer array over a shard_map axis.
+
+    jax.lax has no ``por``; the usual spelling ``psum(x != 0) > 0`` would
+    re-widen the packed uint32 replica words back to one int32 *per bit*.
+    This keeps the payload packed: recursive doubling over ``ppermute``
+    (log2 D steps, each moving only the packed words) when the axis size
+    is a power of two, else one ``all_gather`` + fold.  Both are exact
+    bitwise OR, so results are bit-identical either way.
+
+    ``num_devices`` must be the static axis size (from the mesh shape) —
+    old jaxlibs have no ``jax.lax.axis_size``.
+    """
+    d = int(num_devices)
+    if d <= 1:
+        return x
+    if d & (d - 1) == 0:
+        step = 1
+        while step < d:
+            x = x | jax.lax.ppermute(
+                x, axis_name, [(i, i ^ step) for i in range(d)])
+            step *= 2
+        return x
+    gathered = jax.lax.all_gather(x, axis_name)
+    out = gathered[0]
+    for i in range(1, d):
+        out = out | gathered[i]
+    return out
 
 
 def pvary(x, axis_names):

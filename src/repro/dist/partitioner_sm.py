@@ -46,6 +46,7 @@ from repro.core.partitioner import (I32_INF, NEConfig, PartitionResult,
                                     priority_enc, vertex_claims)
 from repro.dist import compat
 from repro.io.edgefile import EdgeFile
+from repro.kernels.ne_round import ops as ne_ops
 from repro.io.stream import require_canonical, shard_edges_stream
 
 AXIS = "shard"
@@ -54,7 +55,9 @@ Array = jax.Array
 
 class SpmdState(NamedTuple):
     edge_part: Array        # (C,)   int32 per-device shard, -1 = unallocated
-    vparts: Array           # (N, P) bool replica sets — replicated
+    vparts: Array           # (N, P) bool replica sets — replicated; with
+    #                         cfg.use_pallas, bit-packed (N, ceil(P/32))
+    #                         uint32 words (repro.kernels.ne_round)
     degree_rest: Array      # (N,)   int32 — replicated
     edges_per_part: Array   # (P,)   int32 — replicated
     key: Array              # PRNG key — replicated
@@ -63,22 +66,36 @@ class SpmdState(NamedTuple):
 
 
 def _apply_alloc(new, part, u_loc, v_loc, n, p_num, vparts, degree_rest,
-                 edges_per_part):
+                 edges_per_part, num_dev, local_counts=None):
     """Fold one local allocation batch into the replicated state.
 
     ``psum`` of the per-device deltas + OR of the replica-set delta ==
-    the paper's SyncVertexAllocations.
+    the paper's SyncVertexAllocations.  When ``vparts`` arrives bit-packed
+    (uint32 words — cfg.use_pallas), the replica-set delta is packed
+    *before* the collective, so the all-reduce moves (N, ceil(P/32))·4
+    bytes instead of the bool path's (N, P)·4-byte int32 psum — exact OR
+    either way, hence bit-identical replica sets after unpacking.
     """
+    packed = vparts.dtype == jnp.uint32
     newi = new.astype(jnp.int32)
     add = jnp.where(new, part, 0)
-    counts = jnp.zeros((p_num,), jnp.int32).at[add].add(newi)
+    counts = local_counts
+    if counts is None:
+        counts = jnp.zeros((p_num,), jnp.int32).at[add].add(newi)
     counts = jax.lax.psum(counts, AXIS)
     drop_u = jnp.where(new, u_loc, n)
     drop_v = jnp.where(new, v_loc, n)
-    vnew = jnp.zeros_like(vparts)
-    vnew = vnew.at[drop_u, add].set(True, mode="drop")
-    vnew = vnew.at[drop_v, add].set(True, mode="drop")
-    vparts = vparts | (jax.lax.psum(vnew.astype(jnp.int32), AXIS) > 0)
+    if packed:
+        vnew = jnp.zeros((n, p_num), bool)
+        vnew = vnew.at[drop_u, add].set(True, mode="drop")
+        vnew = vnew.at[drop_v, add].set(True, mode="drop")
+        delta = compat.or_all_reduce(ne_ops.pack_bits(vnew), AXIS, num_dev)
+        vparts = ne_ops.or_words(vparts, delta)
+    else:
+        vnew = jnp.zeros_like(vparts)
+        vnew = vnew.at[drop_u, add].set(True, mode="drop")
+        vnew = vnew.at[drop_v, add].set(True, mode="drop")
+        vparts = vparts | (jax.lax.psum(vnew.astype(jnp.int32), AXIS) > 0)
     dec = (jnp.zeros((n,), jnp.int32)
            .at[drop_u].add(newi, mode="drop")
            .at[drop_v].add(newi, mode="drop"))
@@ -86,25 +103,39 @@ def _apply_alloc(new, part, u_loc, v_loc, n, p_num, vparts, degree_rest,
     return vparts, degree_rest, edges_per_part + counts, counts.sum()
 
 
-def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
-                v_loc: Array, mask_loc: Array, state: SpmdState) -> SpmdState:
+def _spmd_round(cfg: NEConfig, limit: int, n: int, num_dev: int,
+                u_loc: Array, v_loc: Array, mask_loc: Array,
+                state: SpmdState) -> SpmdState:
     p_num = cfg.num_partitions
+    packed = cfg.use_pallas
     key, sub = jax.random.split(state.key)
 
     # --- 1. replicated selection + claims ----------------------------------
-    vclaim = vertex_claims(cfg, limit, state.vparts, state.degree_rest,
+    # the packed replica map unpacks once per round for selection; every
+    # other consumer below reads the packed words directly
+    vparts_rep = (ne_ops.unpack_bits(state.vparts, p_num) if packed
+                  else state.vparts)
+    vclaim = vertex_claims(cfg, limit, vparts_rep, state.degree_rest,
                            state.edges_per_part, sub)
 
     # --- 2. one-hop allocation on the local shard --------------------------
-    k_uv = jnp.minimum(vclaim[u_loc], vclaim[v_loc])
-    new1 = mask_loc & (state.edge_part < 0) & (k_uv < I32_INF)
-    part1 = jnp.where(new1, (k_uv % p_num).astype(jnp.int32), -1)
+    counts1 = None
+    if packed:
+        part1, counts1 = ne_ops.one_hop(vclaim, u_loc, v_loc,
+                                        state.edge_part, p_num,
+                                        mask=mask_loc)
+        new1 = part1 >= 0
+    else:
+        k_uv = jnp.minimum(vclaim[u_loc], vclaim[v_loc])
+        new1 = mask_loc & (state.edge_part < 0) & (k_uv < I32_INF)
+        part1 = jnp.where(new1, (k_uv % p_num).astype(jnp.int32), -1)
     edge_part = jnp.where(new1, part1, state.edge_part)
 
     # --- 3. SyncVertexAllocations ------------------------------------------
     vparts, degree_rest, edges_per_part, new_total = _apply_alloc(
         new1, part1, u_loc, v_loc, n, p_num, state.vparts,
-        state.degree_rest, state.edges_per_part)
+        state.degree_rest, state.edges_per_part, num_dev,
+        local_counts=counts1)
 
     # --- 4. two-hop free edges, Condition (5) ------------------------------
     if cfg.two_hop:
@@ -125,7 +156,11 @@ def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
 
         def cand_chunk(counts, args):
             uu, vv, un = args
-            inter = vparts[uu] & vparts[vv]                       # (ce, P)
+            if packed:
+                # gather packed words (32× less traffic), unpack per chunk
+                inter = ne_ops.unpack_bits(vparts[uu] & vparts[vv], p_num)
+            else:
+                inter = vparts[uu] & vparts[vv]                   # (ce, P)
             k2 = jnp.where(inter & un[:, None], enc_vec[None, :], I32_INF)
             best = k2.min(axis=1)
             cand_c = jnp.where(best < I32_INF,
@@ -154,7 +189,7 @@ def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
         edge_part = jnp.where(keep, part2, edge_part)
         vparts, degree_rest, edges_per_part, new2 = _apply_alloc(
             keep, part2, u_loc, v_loc, n, p_num, vparts, degree_rest,
-            edges_per_part)
+            edges_per_part, num_dev)
         new_total = new_total + new2
 
     return SpmdState(edge_part, vparts, degree_rest, edges_per_part, key,
@@ -164,6 +199,15 @@ def _spmd_round(cfg: NEConfig, limit: int, n: int, u_loc: Array,
 # ---------------------------------------------------------------------------
 # round-stepping surface (repro.runtime.driver)
 # ---------------------------------------------------------------------------
+
+def _empty_vparts(n: int, cfg: NEConfig) -> Array:
+    """All-empty replica sets in the representation the round uses:
+    bit-packed uint32 words under cfg.use_pallas, (N, P) bool otherwise."""
+    if cfg.use_pallas:
+        w = ne_ops.replica_words(cfg.num_partitions)
+        return jnp.zeros((n, w), jnp.uint32)
+    return jnp.zeros((n, cfg.num_partitions), bool)
+
 
 def spmd_init_state(shards: np.ndarray, masks: np.ndarray, n: int,
                     cfg: NEConfig) -> SpmdState:
@@ -179,7 +223,7 @@ def spmd_init_state(shards: np.ndarray, masks: np.ndarray, n: int,
     np.add.at(degree, flat[:, 1], 1)
     return SpmdState(
         edge_part=jnp.full(masks.shape, -1, jnp.int32),
-        vparts=jnp.zeros((n, p_num), bool),
+        vparts=_empty_vparts(n, cfg),
         degree_rest=jnp.asarray(degree.astype(np.int32)),
         edges_per_part=jnp.zeros((p_num,), jnp.int32),
         key=jax.random.PRNGKey(cfg.seed),
@@ -201,9 +245,12 @@ def spmd_round_step(cfg: NEConfig, limit: int, n: int, mesh,
     tests/test_runtime.py).  ``state.edge_part`` is (D, C) and sharded over
     the device axis; everything else is replicated.
     """
+    num_dev = mesh.shape[AXIS]
+
     def body(u_l, v_l, mask_l, ep_l, vp, dr, epp, key, rounds, remaining):
         st = SpmdState(ep_l[0], vp, dr, epp, key, rounds, remaining)
-        out = _spmd_round(cfg, limit, n, u_l[0], v_l[0], mask_l[0], st)
+        out = _spmd_round(cfg, limit, n, num_dev, u_l[0], v_l[0],
+                          mask_l[0], st)
         return out._replace(edge_part=out.edge_part[None])
 
     rep = (P(),) * 6
@@ -244,12 +291,13 @@ def _partition_spmd_jit(cfg: NEConfig, limit: int, n: int, mesh,
                         u_sh: Array, v_sh: Array, mask_sh: Array,
                         m_total: Array):
     p_num = cfg.num_partitions
+    num_dev = mesh.shape[AXIS]
 
     def body(u_l, v_l, mask_l, m_tot):
         u_l, v_l, mask_l = u_l[0], v_l[0], mask_l[0]
         init = SpmdState(
             edge_part=jnp.full(u_l.shape, -1, jnp.int32),
-            vparts=jnp.zeros((n, p_num), bool),
+            vparts=_empty_vparts(n, cfg),
             degree_rest=(jnp.zeros((n,), jnp.int32)
                          .at[u_l].add(mask_l.astype(jnp.int32))
                          .at[v_l].add(mask_l.astype(jnp.int32))),
@@ -266,7 +314,8 @@ def _partition_spmd_jit(cfg: NEConfig, limit: int, n: int, mesh,
             return (s.remaining > 0) & (s.rounds < cfg.max_rounds)
 
         out = jax.lax.while_loop(
-            cond, partial(_spmd_round, cfg, limit, n, u_l, v_l, mask_l),
+            cond,
+            partial(_spmd_round, cfg, limit, n, num_dev, u_l, v_l, mask_l),
             init)
         return (out.edge_part[None], out.vparts, out.edges_per_part,
                 out.rounds)
@@ -337,5 +386,7 @@ def partition_spmd(g: Graph, cfg: NEConfig,
                             jnp.asarray(masks), jnp.int32(m)))
 
     edge_part = stitch_edge_part(ep_sh, dev, m)
+    if cfg.use_pallas:  # result surface is always (N, P) bool
+        vparts = ne_ops.unpack_bits_np(np.asarray(vparts), p_num)
     return finalize_result(edge_part, vparts, counts, edges, cfg,
                            int(rounds))

@@ -1,0 +1,103 @@
+"""Front door for the ne_round kernel family.
+
+Dispatch contract (mirrors ``block_spmm``/``flash_attention``, plus an
+impl override):
+
+* ``NEConfig.use_pallas`` decides whether the partitioners run the fused
+  family at all — and, in the SPMD round, whether replica sets are
+  bit-packed.  A ``None`` field resolves from ``REPRO_NE_KERNELS`` at
+  config construction (``env_enabled``), so the resolved config is
+  self-contained and its fingerprint stable.
+* ``REPRO_NE_KERNELS=ref`` keeps the family enabled but routes every op
+  to the XLA reference implementation — same packed representation, same
+  bits, no Pallas import.  The CI A/B lever and the escape hatch for
+  backends without Pallas.
+* Otherwise ops run the Pallas kernels, in interpret mode off-TPU.
+
+The Pallas module is imported lazily, only when a call actually
+dispatches to it — importing this module (and therefore
+``repro.core.partitioner``) never pulls Pallas TPU lowering.  CI guards
+this (tests/test_kernels.py + the lint grep).
+"""
+from __future__ import annotations
+
+import os
+
+from repro.kernels.ne_round import ref
+from repro.kernels.ne_round.ref import (  # noqa: F401  (re-exports)
+    I32_INF,
+    pack_bits_np,
+    replica_words,
+    unpack_bits_np,
+)
+
+ENV_VAR = "REPRO_NE_KERNELS"
+
+
+def env_enabled() -> bool:
+    """Default for ``NEConfig.use_pallas`` when left as ``None``."""
+    v = os.environ.get(ENV_VAR, "").strip().lower()
+    return v not in ("", "0", "off", "false", "no")
+
+
+def use_ref_impl() -> bool:
+    """``REPRO_NE_KERNELS=ref`` → run the family as pure XLA."""
+    return os.environ.get(ENV_VAR, "").strip().lower() == "ref"
+
+
+def _pallas():
+    # lazy: keeps repro.core / repro.io free of Pallas imports
+    from repro.kernels.ne_round import ne_round
+    return ne_round
+
+
+def _interpret() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def one_hop(vclaim, u, v, edge_part, num_partitions: int, mask=None):
+    if use_ref_impl():
+        return ref.one_hop_ref(vclaim, u, v, edge_part, num_partitions,
+                               mask=mask)
+    return _pallas().one_hop(vclaim, u, v, edge_part, num_partitions,
+                             mask=mask, interpret=_interpret())
+
+
+def select_topk(vparts_c, active_c, degree_rest, lam: float, k_sel: int,
+                remaining_c, rnd_v, any_ok):
+    if use_ref_impl():
+        return ref.select_ref(vparts_c, active_c, degree_rest, lam, k_sel,
+                              remaining_c, rnd_v, any_ok)
+    return _pallas().select(vparts_c, active_c, degree_rest, lam, k_sel,
+                            remaining_c, rnd_v, any_ok,
+                            interpret=_interpret())
+
+
+def claim_scatter(sel_idx, sel_valid, edges_per_part, num_vertices: int,
+                  num_partitions: int):
+    if use_ref_impl():
+        return ref.claim_scatter_ref(sel_idx, sel_valid, edges_per_part,
+                                     num_vertices, num_partitions)
+    return _pallas().claim_scatter(sel_idx, sel_valid, edges_per_part,
+                                   num_vertices, num_partitions,
+                                   interpret=_interpret())
+
+
+def pack_bits(bools):
+    if use_ref_impl():
+        return ref.pack_bits_ref(bools)
+    return _pallas().pack_bits(bools, interpret=_interpret())
+
+
+def unpack_bits(words, num_partitions: int):
+    if use_ref_impl():
+        return ref.unpack_bits_ref(words, num_partitions)
+    return _pallas().unpack_bits(words, num_partitions,
+                                 interpret=_interpret())
+
+
+def or_words(a, b):
+    if use_ref_impl():
+        return ref.or_words_ref(a, b)
+    return _pallas().or_words(a, b, interpret=_interpret())

@@ -58,6 +58,7 @@ from repro.dist.partitioner_sm import (AXIS, SpmdState, spmd_done,
                                        spmd_init_state, spmd_round_step,
                                        stitch_edge_part)
 from repro.io.edgefile import EdgeFile
+from repro.kernels.ne_round import ops as ne_ops
 from repro.io.stream import require_canonical
 from repro.launch.mesh import make_edge_mesh
 from repro.runtime import cluster
@@ -286,7 +287,12 @@ class PartitionDriver:
         else:
             ep_sh = np.asarray(self.state.edge_part)
             edge_part = stitch_edge_part(ep_sh, self._dev, self.m)
-        self._result = finalize_result(edge_part, self.state.vparts,
+        vparts = self.state.vparts
+        if self.mode == "spmd" and self.cfg.use_pallas:
+            # SPMD round state keeps replica sets bit-packed; the result
+            # surface is always (N, P) bool
+            vparts = ne_ops.unpack_bits_np(np.asarray(vparts), p_num)
+        self._result = finalize_result(edge_part, vparts,
                                        self.state.edges_per_part,
                                        self._edges, self.cfg, self.rounds)
         return self._result
@@ -319,6 +325,8 @@ class PartitionDriver:
                                   self._owned)
         counts = np.array(self.state.edges_per_part)       # replicated
         vparts = np.array(self.state.vparts)               # replicated
+        if self.cfg.use_pallas:  # round state is bit-packed words
+            vparts = ne_ops.unpack_bits_np(vparts, p_num)
         rounds = self.rounds
 
         fin_dir = os.path.join(self._exchange_dir, "finalize")

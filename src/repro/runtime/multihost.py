@@ -178,9 +178,14 @@ def spmd_init_state_global(
         (cap,),
         np.int32,
     )
+    if getattr(cfg, "use_pallas", False):
+        from repro.kernels.ne_round import ops as ne_ops
+        vp0 = np.zeros((n, ne_ops.replica_words(p_num)), np.uint32)
+    else:
+        vp0 = np.zeros((n, p_num), bool)
     return SpmdState(
         edge_part=edge_part,
-        vparts=replicate(mesh, np.zeros((n, p_num), bool)),
+        vparts=replicate(mesh, vp0),
         degree_rest=replicate(mesh, degree.astype(np.int32)),
         edges_per_part=replicate(mesh, np.zeros((p_num,), np.int32)),
         key=replicate(mesh, np.asarray(jax.random.PRNGKey(cfg.seed))),

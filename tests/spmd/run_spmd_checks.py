@@ -37,6 +37,42 @@ out["rf_spmd"] = st_sm.replication_factor
 out["eb_spmd"] = st_sm.edge_balance
 out["spmd_all_assigned"] = bool((res_sm.edge_part >= 0).all())
 
+# --- fused ne_round kernels + bit-packed replica sets: bit-identity --------
+import dataclasses  # noqa: E402
+
+cfg_pl = dataclasses.replace(cfg, use_pallas=True)
+res_pl = partition_spmd(g, cfg_pl)
+out["pallas_spmd_identical"] = bool(
+    (res_pl.edge_part == res_sm.edge_part).all()
+    and (res_pl.vparts == res_sm.vparts).all()
+    and (res_pl.edges_per_part == res_sm.edges_per_part).all())
+res_pl_sc = partition(g, dataclasses.replace(cfg, use_pallas=True))
+out["pallas_single_identical"] = bool(
+    (res_pl_sc.edge_part == res_sc.edge_part).all()
+    and (res_pl_sc.vparts == res_sc.vparts).all())
+
+# packed OR all-reduce == bool psum path, on the real 8-device mesh
+from jax.sharding import PartitionSpec as PSpec  # noqa: E402
+from repro.kernels.ne_round import ops as ne_ops  # noqa: E402
+
+rng_or = np.random.default_rng(11)
+bool_sh = rng_or.random((8, 128, 37)) < 0.1          # P=37: not 32-aligned
+mesh_or = compat.make_mesh((8,), ("shard",))
+
+
+def _or_body(b):
+    words = ne_ops.pack_bits(b[0])
+    red = compat.or_all_reduce(words, "shard", 8)
+    return ne_ops.unpack_bits(red, 37)[None]
+
+
+or_out = compat.shard_map(
+    _or_body, mesh=mesh_or, in_specs=(PSpec("shard", None, None),),
+    out_specs=PSpec("shard", None, None), check_vma=False,
+)(jax.numpy.asarray(bool_sh))
+out["pallas_or_reduce_ok"] = bool(
+    (np.asarray(or_out) == bool_sh.any(axis=0)[None]).all())
+
 # --- GAS engine apps vs networkx -------------------------------------------
 sg = build_sharded_graph(e, res_sm.edge_part, g.num_vertices, 8)
 gx = to_networkx(g)

@@ -1,0 +1,244 @@
+"""ne_round kernel family: Pallas (interpret) vs XLA ref vs the live
+partitioner chains — all-integer math, so every comparison is exact.
+
+Separate from test_kernels.py so none of this skips when hypothesis is
+absent; the fuzz test guards its own import.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partitioner import (I32_INF, NEConfig, boundary_reseed,
+                                    partition, priority_enc, select_chunk,
+                                    vertex_claims)
+from repro.graphs.generators import barabasi_albert
+from repro.graphs.rmat import rmat
+from repro.kernels.ne_round import ne_round as ne_pl
+from repro.kernels.ne_round import ops as ne_ops
+from repro.kernels.ne_round import ref as ne_ref
+
+pytestmark = pytest.mark.kernels
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _rand_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2))
+    return e[e[:, 0] != e[:, 1]]
+
+
+# --------------------------------------------------------------------------
+# one-hop allocation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,p,seed", [(50, 200, 4, 0), (300, 1000, 8, 1),
+                                        (128, 500, 16, 2)])
+def test_one_hop_pallas_matches_ref(n, m, p, seed):
+    rng = np.random.default_rng(seed)
+    e = _rand_graph(n, m, seed)
+    u, v = jnp.asarray(e[:, 0]), jnp.asarray(e[:, 1])
+    # claim keys: mostly unclaimed, a few priority_enc-style small keys
+    vclaim = np.full(n, I32_INF, np.int32)
+    claimed = rng.integers(0, n, n // 3)
+    vclaim[claimed] = rng.integers(0, 1000, claimed.size)
+    ep = jnp.asarray(np.where(rng.random(e.shape[0]) < 0.3, 0, -1)
+                     .astype(np.int32))
+    mask = jnp.asarray(rng.random(e.shape[0]) < 0.9)
+    for mk in (None, mask):
+        got = ne_pl.one_hop(jnp.asarray(vclaim), u, v, ep, p, mask=mk,
+                            block_edges=128, interpret=True)
+        want = ne_ref.one_hop_ref(jnp.asarray(vclaim), u, v, ep, p, mask=mk)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]))
+
+
+def test_one_hop_matches_segment_min_chain():
+    """The fused edge-list kernel == the CSR-slot segment_min chain of
+    core.partitioner._round (each undirected edge owns two slots)."""
+    from repro.core.graph import as_graph
+
+    g = as_graph(barabasi_albert(200, 3, seed=3))
+    n, m = g.num_vertices, g.num_edges
+    rng = np.random.default_rng(4)
+    vclaim = np.full(n, I32_INF, np.int32)
+    cl = rng.integers(0, n, n // 2)
+    vclaim[cl] = priority_enc(jnp.asarray(rng.integers(0, 50, cl.size)),
+                              jnp.asarray(rng.integers(0, 8, cl.size)), 8)
+    vclaim = jnp.asarray(vclaim)
+    ep = jnp.asarray(np.where(rng.random(m) < 0.4, 2, -1).astype(np.int32))
+    slot_key = vclaim[g.slot_src]
+    slot_ok = (slot_key < I32_INF) & (ep[g.adj_eid] < 0)
+    ekey = jax.ops.segment_min(jnp.where(slot_ok, slot_key, I32_INF),
+                               g.adj_eid, num_segments=m)
+    want_part = jnp.where(ekey < I32_INF, ekey % 8, -1)
+    got_part, got_counts = ne_ops.one_hop(
+        vclaim, g.edges[:, 0], g.edges[:, 1], ep, 8)
+    np.testing.assert_array_equal(np.asarray(got_part),
+                                  np.asarray(want_part))
+    assert int(got_counts.sum()) == int((np.asarray(want_part) >= 0).sum())
+
+
+# --------------------------------------------------------------------------
+# boundary selection + claim scatter
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,k_sel,seed", [(100, 4, 16, 0), (600, 8, 64, 1),
+                                            (257, 3, 32, 2)])
+def test_select_pallas_matches_select_chunk(n, c, k_sel, seed):
+    rng = np.random.default_rng(seed)
+    vparts_c = jnp.asarray(rng.random((c, n)) < 0.15)
+    active_c = jnp.asarray(rng.random(c) < 0.8)
+    degree_rest = jnp.asarray(rng.integers(0, 20, n).astype(np.int32))
+    remaining_c = jnp.asarray(rng.integers(0, 200, c).astype(np.int32))
+    keys_c = jax.vmap(jax.random.PRNGKey)(jnp.arange(c) + seed)
+    want_idx, want_val = select_chunk(vparts_c, active_c, degree_rest, 0.5,
+                                      k_sel, keys_c, remaining_c)
+    rnd_v, any_ok = boundary_reseed(degree_rest, keys_c)
+    got_idx, got_val = ne_pl.select(vparts_c, active_c, degree_rest, 0.5,
+                                    k_sel, remaining_c, rnd_v, any_ok,
+                                    block_n=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_val), np.asarray(want_val))
+    # invalid slots never feed downstream; valid ones must agree exactly
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(got_val, got_idx, -1)),
+        np.asarray(jnp.where(want_val, want_idx, -1)))
+    # claims built from each must agree (full downstream equivalence)
+    epp = jnp.asarray(rng.integers(0, 100, c).astype(np.int32))
+    got_claim = ne_pl.claim_scatter(got_idx, got_val, epp, n, c,
+                                    interpret=True)
+    want_claim = ne_ref.claim_scatter_ref(want_idx, want_val, epp, n, c)
+    np.testing.assert_array_equal(np.asarray(got_claim),
+                                  np.asarray(want_claim))
+
+
+def test_vertex_claims_bit_identical():
+    """End-to-end vertex_claims: pallas-config == xla-config, same state."""
+    rng = np.random.default_rng(7)
+    n, p = 400, 8
+    vparts = jnp.asarray(rng.random((n, p)) < 0.1)
+    degree_rest = jnp.asarray(rng.integers(0, 15, n).astype(np.int32))
+    epp = jnp.asarray(rng.integers(0, 300, p).astype(np.int32))
+    sub = jax.random.PRNGKey(9)
+    kw = dict(num_partitions=p, seed=0, k_sel=32)
+    ref_claims = vertex_claims(NEConfig(use_pallas=False, **kw), 500,
+                               vparts, degree_rest, epp, sub)
+    pal_claims = vertex_claims(NEConfig(use_pallas=True, **kw), 500,
+                               vparts, degree_rest, epp, sub)
+    np.testing.assert_array_equal(np.asarray(ref_claims),
+                                  np.asarray(pal_claims))
+
+
+# --------------------------------------------------------------------------
+# bit-packed replica sets
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [1, 8, 31, 32, 33, 64, 100])
+def test_pack_unpack_roundtrip(p):
+    rng = np.random.default_rng(p)
+    b = rng.random((57, p)) < 0.3
+    words = ne_ops.pack_bits(jnp.asarray(b))
+    assert words.shape == (57, ne_ops.replica_words(p))
+    assert words.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(ne_ops.unpack_bits(words, p)), b)
+    # jnp ref / numpy host twins agree with the kernel bit layout
+    np.testing.assert_array_equal(np.asarray(words),
+                                  ne_ref.pack_bits_np(b))
+    np.testing.assert_array_equal(
+        np.asarray(ne_ref.pack_bits_ref(jnp.asarray(b))), np.asarray(words))
+    np.testing.assert_array_equal(ne_ref.unpack_bits_np(np.asarray(words),
+                                                        p), b)
+
+
+def test_or_words_equals_bool_or():
+    rng = np.random.default_rng(0)
+    a = rng.random((40, 37)) < 0.2
+    b = rng.random((40, 37)) < 0.2
+    merged = ne_ops.or_words(ne_ops.pack_bits(jnp.asarray(a)),
+                             ne_ops.pack_bits(jnp.asarray(b)))
+    np.testing.assert_array_equal(np.asarray(ne_ops.unpack_bits(merged, 37)),
+                                  a | b)
+
+
+def test_pack_fuzz_odd_widths():
+    """Hypothesis fuzz over P not divisible by 32 (skips w/o hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 80),
+           p=st.integers(1, 130).filter(lambda x: x % 32 != 0),
+           seed=st.integers(0, 99))
+    def inner(n, p, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.random((n, p)) < 0.4
+        b = rng.random((n, p)) < 0.4
+        wa = ne_ref.pack_bits_np(a)
+        assert wa.shape == (n, (p + 31) // 32)
+        np.testing.assert_array_equal(ne_ref.unpack_bits_np(wa, p), a)
+        merged = ne_ref.unpack_bits_np(wa | ne_ref.pack_bits_np(b), p)
+        np.testing.assert_array_equal(merged, a | b)
+
+    inner()
+
+
+# --------------------------------------------------------------------------
+# whole-run bit-identity + switches
+# --------------------------------------------------------------------------
+
+def test_partition_pallas_bit_identical_rmat():
+    g = rmat(10, 8, seed=13)
+    kw = dict(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
+    r0 = partition(g, NEConfig(use_pallas=False, **kw))
+    r1 = partition(g, NEConfig(use_pallas=True, **kw))
+    np.testing.assert_array_equal(r0.edge_part, r1.edge_part)
+    np.testing.assert_array_equal(r0.vparts, r1.vparts)
+    np.testing.assert_array_equal(r0.edges_per_part, r1.edges_per_part)
+    assert r0.rounds == r1.rounds
+
+
+def test_ref_impl_env_switch(monkeypatch):
+    """REPRO_NE_KERNELS=ref enables the family but routes to pure XLA."""
+    monkeypatch.setenv("REPRO_NE_KERNELS", "ref")
+    assert ne_ops.env_enabled() and ne_ops.use_ref_impl()
+    cfg = NEConfig(num_partitions=4)
+    assert cfg.use_pallas is True
+    g = barabasi_albert(120, 3, seed=1)
+    r_env = partition(g, NEConfig(num_partitions=4, seed=0, k_sel=16))
+    monkeypatch.delenv("REPRO_NE_KERNELS")
+    assert not ne_ops.env_enabled()
+    r_ref = partition(g, NEConfig(num_partitions=4, seed=0, k_sel=16,
+                                  use_pallas=False))
+    np.testing.assert_array_equal(r_env.edge_part, r_ref.edge_part)
+    np.testing.assert_array_equal(r_env.vparts, r_ref.vparts)
+
+
+def test_core_and_io_stay_pallas_free():
+    """Tier-1 never imports Pallas TPU lowering through repro.core /
+    repro.io / the dist partitioner: the ops front door defers the kernel
+    module until a pallas-dispatching call actually runs."""
+    code = (
+        "import sys\n"
+        "import repro.core.partitioner, repro.core.graph\n"
+        "import repro.dist.partitioner_sm\n"
+        "import repro.io.edgefile, repro.io.stream\n"
+        "from repro.kernels.ne_round import ops\n"
+        "bad = [m for m in sys.modules if 'pallas' in m]\n"
+        "assert not bad, f'pallas imported at module load: {bad}'\n"
+        "print('CLEAN')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=120,
+        env={**__import__('os').environ,
+             "PYTHONPATH": str(ROOT / "src")})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "CLEAN" in proc.stdout

@@ -39,6 +39,21 @@ def test_spmd_partitioner_matches_single_controller(spmd_results):
     assert spmd_results["eb_spmd"] < 1.15
 
 
+@pytest.mark.kernels
+def test_pallas_round_bit_identity(spmd_results):
+    """Fused ne_round kernels + bit-packed replica sets reproduce the XLA
+    round bit-for-bit on a real 8-device mesh (and single-controller)."""
+    assert spmd_results["pallas_spmd_identical"]
+    assert spmd_results["pallas_single_identical"]
+
+
+@pytest.mark.kernels
+def test_pallas_or_reduce_matches_bool_any(spmd_results):
+    """Packed OR all-reduce (ppermute doubling) == element-wise any over
+    the device axis, for P not divisible by 32."""
+    assert spmd_results["pallas_or_reduce_ok"]
+
+
 def test_pagerank_matches_networkx(spmd_results):
     assert spmd_results["pr_max_err"] < 1e-6
 
