@@ -104,6 +104,31 @@ def main(fast: bool = False, smoke: bool = False):
         record("runtime/round_plain", t_plain * 1e6,
                f"rounds={res.rounds}")
 
+        # tracing overhead: the identical run with the tracer streaming
+        # its JSONL log.  The smoke gate asserts instrumentation stays
+        # out of the round budget (<5%, with an absolute floor so
+        # sub-ms smoke rounds don't gate on scheduler noise) and that
+        # spans never alter the computed assignment.
+        from repro.obs import trace as obs
+
+        obs.configure(path=str(Path(td) / "trace" / obs.log_name(0)),
+                      process=0, meta={"bench": "runtime"})
+        drv_t = PartitionDriver(g, cfg)
+        drv_t.step()
+        t0 = time.time()
+        res_t = drv_t.run()
+        t_traced = (time.time() - t0) / max(res_t.rounds - 1, 1)
+        obs.disable()
+        record("runtime/trace_overhead", (t_traced - t_plain) * 1e6,
+               f"+{(t_traced - t_plain) / max(t_plain, 1e-12) * 100:.2f}%")
+        assert (res_t.edge_part == res.edge_part).all(), \
+            "traced run diverged from untraced run"
+        if smoke:
+            slack = max(t_plain * 0.05, 5e-4)
+            assert t_traced - t_plain <= slack, (
+                f"tracing overhead {t_traced - t_plain:.6f}s/round exceeds "
+                f"{slack:.6f}s (plain {t_plain:.6f}s)")
+
         snap_dir = Path(td) / "snap"
         drv_s = PartitionDriver(g, cfg, snapshot_dir=snap_dir,
                                 snapshot_every=1, keep=100_000)

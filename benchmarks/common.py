@@ -10,6 +10,12 @@ import time
 
 import numpy as np
 
+from repro.obs.rss import (  # noqa: F401  (re-exported for suites)
+    peak_rss_kb,
+    vm_hwm_kb,
+    vm_rss_kb,
+)
+
 ROWS: list[tuple[str, float, str]] = []
 
 
@@ -46,51 +52,16 @@ def ensure_graph(source):
     return as_graph(source)
 
 
+# the measurement logic lives in repro.obs.rss (jax-free, importable in
+# the child because child_peak_rss_kb puts src/ on PYTHONPATH); these
+# strings just bracket the child code with it
 _RSS_PROLOGUE = """
-import os as _os, threading as _th, time as _time
-_page_kb = _os.sysconf("SC_PAGE_SIZE") // 1024
-_peak = [0]
-def _vm_hwm_kb():
-    # the kernel's own lifetime watermark: monotone, so a one-instant
-    # allocation spike between (or after) samples can never be lost —
-    # unlike sampled VmRSS, which under-reports whenever the child
-    # outlives the spike by more than the sample interval
-    try:
-        with open("/proc/self/status") as f:
-            for line in f:
-                if line.startswith("VmHWM:"):
-                    return int(line.split()[1])
-    except OSError:
-        pass
-    return 0
-def _vm_rss_kb():
-    try:
-        with open("/proc/self/statm") as f:
-            return int(f.read().split()[1]) * _page_kb
-    except OSError:
-        return 0
-def _sample():
-    while True:
-        _peak[0] = max(_peak[0], _vm_rss_kb())
-        _time.sleep(0.002)
-if _vm_hwm_kb() == 0:
-    # no VmHWM on this kernel: fall back to sampling instantaneous VmRSS
-    _th.Thread(target=_sample, daemon=True).start()
+from repro.obs.rss import peak_rss_kb as _peak_rss_kb, \\
+    start_fallback_sampler as _start_sampler
+_start_sampler()
 """
 
 _RSS_EPILOGUE = """
-def _peak_rss_kb():
-    # VmHWM is the ground truth where /proc provides it; the VmRSS
-    # sampler only backs up kernels without it.  ru_maxrss is NOT
-    # trustworthy here: it survives execve, so a child of a jax-loaded
-    # parent inherits the parent's watermark through it.
-    peak = _vm_hwm_kb()
-    if peak == 0:
-        peak = max(_peak[0], _vm_rss_kb())
-    if peak == 0:
-        import resource
-        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-    return peak
 print(_peak_rss_kb())
 """
 

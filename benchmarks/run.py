@@ -9,17 +9,47 @@ Exit contract (the smoke gate depends on it): any suite that raises —
 including ``SystemExit`` from a ``sys.exit()`` deep in a suite — marks
 the run failed and the driver exits 1; an ``--only``/``--smoke``
 selection that matches *nothing* exits 2 instead of reporting success
-having run nothing.
+having run nothing; ``--compare`` against a prior BENCH_*.json exits 3
+when any shared row regressed by more than 25% (CI treats 3 as
+advisory — noise-prone micro rows must not block merges).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import tempfile
 import traceback
+
+REGRESSION_PCT = 25.0  # --compare gate: slower than prior by more → exit 3
 
 
 SMOKE_SUITES = ("theory", "memory", "spmd", "runtime",
                 "kernels")  # tiny CI drift gate
+
+
+def compare_rows(rows, prior_path: str) -> list[tuple]:
+    """Print per-row deltas vs a committed BENCH_*.json; return the rows
+    that regressed by more than :data:`REGRESSION_PCT` percent."""
+    import json
+
+    with open(prior_path) as f:
+        prior = {r["name"]: float(r["us_per_call"]) for r in json.load(f)}
+    regressions = []
+    print(f"\n--- compare vs {prior_path} ---")
+    for name, us, _derived in rows:
+        old = prior.get(name)
+        if old is None:
+            print(f"{name}: (new) {us:.1f}us")
+            continue
+        if old <= 0:
+            continue
+        pct = (us - old) / old * 100.0
+        flag = "  REGRESSION" if pct > REGRESSION_PCT else ""
+        print(f"{name}: {old:.1f}us -> {us:.1f}us ({pct:+.1f}%){flag}")
+        if pct > REGRESSION_PCT:
+            regressions.append((name, old, us, pct))
+    return regressions
 
 
 def main() -> None:
@@ -34,6 +64,12 @@ def main() -> None:
     ap.add_argument("--json", default=None,
                     help="also write the result rows as a JSON list "
                          "(the committed BENCH_*.json format)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(one span per suite) to this .json path")
+    ap.add_argument("--compare", default=None,
+                    help="prior BENCH_*.json: print per-row deltas; exit 3 "
+                         f"when a shared row slowed by >{REGRESSION_PCT:.0f}%%")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -43,6 +79,15 @@ def main() -> None:
                             bench_roads, bench_runtime, bench_scaling,
                             bench_sequential, bench_spmd, bench_theory)
     from benchmarks.common import ROWS, header
+    from repro.obs import trace as obs
+
+    bench_log = None
+    if args.trace:
+        bench_log = os.path.join(tempfile.mkdtemp(prefix="bench_trace_"),
+                                 obs.log_name(0))
+        obs.configure(path=bench_log, process=0,
+                      meta={"bench": True, "smoke": bool(args.smoke),
+                            "fast": bool(args.fast)})
 
     suites = {
         "theory": lambda: bench_theory.main(),
@@ -75,7 +120,8 @@ def main() -> None:
             continue
         ran.append(name)
         try:
-            fn()
+            with obs.span(name, cat="bench"):
+                fn()
         except KeyboardInterrupt:
             raise
         # BaseException, not Exception: a suite calling sys.exit(0) (or a
@@ -97,6 +143,15 @@ def main() -> None:
                         "derived": derived}
                        for name, us, derived in ROWS], f, indent=2)
             f.write("\n")
+    if args.trace:
+        from repro.obs import export
+
+        obs.disable()  # close + flush the bench tracer's JSONL log
+        export.write_chrome_trace(args.trace, [bench_log])
+        print(f"trace written to {args.trace}", file=sys.stderr)
+    regressions = []
+    if args.compare:
+        regressions = compare_rows(ROWS, args.compare)
     if not ran:
         print("no suites selected — selection bug, not success",
               file=sys.stderr)
@@ -104,6 +159,10 @@ def main() -> None:
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)
+    if regressions:
+        print(f"{len(regressions)} row(s) regressed >{REGRESSION_PCT:.0f}% "
+              f"vs {args.compare} (advisory)", file=sys.stderr)
+        raise SystemExit(3)
 
 
 if __name__ == "__main__":

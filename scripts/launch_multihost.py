@@ -78,6 +78,13 @@ def build_parser() -> argparse.ArgumentParser:
         "cooperative multi-writer save (sharded: no process ever holds "
         "the global assignment)",
     )
+    job.add_argument(
+        "--trace-dir",
+        default=None,
+        help="write one trace_hNNN.jsonl event log per worker here "
+        "(merge with scripts/report_run.py; also enabled by the "
+        "REPRO_TRACE env var)",
+    )
 
     cl = ap.add_argument_group("cluster")
     cl.add_argument("--num-processes", type=int, default=2)

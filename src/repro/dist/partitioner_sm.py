@@ -269,6 +269,28 @@ def spmd_done(state: SpmdState, cfg: NEConfig) -> bool:
                 or int(state.rounds) >= cfg.max_rounds)
 
 
+def round_sync_payload_bytes(cfg: NEConfig, n: int, num_dev: int) -> int:
+    """Per-device bytes one round's SyncVertexAllocations moves.
+
+    The round-loop telemetry counter (``repro.obs``): each
+    ``_apply_alloc`` all-reduces the replica-set delta — (N, ⌈P/32⌉)
+    uint32 words under ``cfg.use_pallas``, an (N, P) int32 psum
+    otherwise — plus the (P,) count and (N,) D_rest deltas; the two-hop
+    pass adds a second sync and the (D, P) quota-histogram all_gather.
+    A pure function of the config so the driver can record it per round
+    without touching device state.
+    """
+    p = cfg.num_partitions
+    if cfg.use_pallas:
+        vbytes = n * ne_ops.replica_words(p) * 4
+    else:
+        vbytes = n * p * 4
+    per_sync = vbytes + p * 4 + n * 4
+    syncs = 2 if cfg.two_hop else 1
+    gather = num_dev * p * 4 if cfg.two_hop else 0
+    return syncs * per_sync + gather
+
+
 def stitch_edge_part(ep_sh: np.ndarray, dev: np.ndarray, m: int,
                      ) -> np.ndarray:
     """Shard-order assignments back to global edge order: shard d holds

@@ -54,13 +54,15 @@ from repro.core.partitioner import (NEConfig, NEState, PartitionResult,
                                     alpha_limit, finalize_result, ne_done,
                                     ne_init_state, ne_round_step)
 from repro.dist import compat
-from repro.dist.partitioner_sm import (AXIS, SpmdState, spmd_done,
+from repro.dist.partitioner_sm import (AXIS, SpmdState,
+                                       round_sync_payload_bytes, spmd_done,
                                        spmd_init_state, spmd_round_step,
                                        stitch_edge_part)
 from repro.io.edgefile import EdgeFile
 from repro.kernels.ne_round import ops as ne_ops
 from repro.io.stream import require_canonical
 from repro.launch.mesh import make_edge_mesh
+from repro.obs import trace as obs
 from repro.runtime import cluster
 from repro.runtime.artifact import PartitionArtifact, save_artifact
 from repro.runtime.snapshot import (RunSnapshot, SnapshotMismatch,
@@ -101,36 +103,43 @@ class PartitionDriver:
             raise ValueError("mode='single' is single-controller by "
                              "definition — multi-process runs drive the "
                              "SPMD partitioner (mode='spmd')")
-        if mode == "single":
-            g = source if isinstance(source, EdgeFile) else as_graph(source)
-            self._graph_fp = graph_fingerprint(g)
-            g = as_graph(g)
-            self.cfg = cfg.clamped(g.num_vertices)
-            self._graph = g
-            self.n, self.m = g.num_vertices, g.num_edges
-            self._edges = np.asarray(g.edges)
-            self.limit = alpha_limit(self.cfg.alpha, self.m,
-                                     self.cfg.num_partitions)
-            self.state: NEState | SpmdState = ne_init_state(g, self.cfg)
-        elif self.multihost:
-            self._init_multihost(source, cfg, num_devices, snapshot_dir,
-                                 exchange_dir)
-        else:
-            self._graph_fp = graph_fingerprint(source)
-            d = num_devices or len(jax.devices())
-            self.num_devices = max(1, min(d, len(jax.devices())))
-            self.n, self.m, self._edges, shards, masks, self._dev = \
-                self._ingest(source, self.num_devices, num_hosts,
-                             ingest_processes)
-            self.cfg = cfg.clamped(self.n)
-            self.limit = alpha_limit(self.cfg.alpha, self.m,
-                                     self.cfg.num_partitions)
-            self.mesh = make_edge_mesh(self.num_devices, axis=AXIS)
-            self._u_sh = jnp.asarray(shards[:, :, 0])
-            self._v_sh = jnp.asarray(shards[:, :, 1])
-            self._mask_sh = jnp.asarray(masks)
-            self.state = spmd_init_state(shards, masks, self.n, self.cfg)
+        with obs.span("ingest", cat="runtime", mode=mode):
+            if mode == "single":
+                g = source if isinstance(source, EdgeFile) \
+                    else as_graph(source)
+                self._graph_fp = graph_fingerprint(g)
+                g = as_graph(g)
+                self.cfg = cfg.clamped(g.num_vertices)
+                self._graph = g
+                self.n, self.m = g.num_vertices, g.num_edges
+                self._edges = np.asarray(g.edges)
+                self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                         self.cfg.num_partitions)
+                self.state: NEState | SpmdState = ne_init_state(g, self.cfg)
+            elif self.multihost:
+                self._init_multihost(source, cfg, num_devices, snapshot_dir,
+                                     exchange_dir)
+            else:
+                self._graph_fp = graph_fingerprint(source)
+                d = num_devices or len(jax.devices())
+                self.num_devices = max(1, min(d, len(jax.devices())))
+                self.n, self.m, self._edges, shards, masks, self._dev = \
+                    self._ingest(source, self.num_devices, num_hosts,
+                                 ingest_processes)
+                self.cfg = cfg.clamped(self.n)
+                self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                         self.cfg.num_partitions)
+                self.mesh = make_edge_mesh(self.num_devices, axis=AXIS)
+                self._u_sh = jnp.asarray(shards[:, :, 0])
+                self._v_sh = jnp.asarray(shards[:, :, 1])
+                self._mask_sh = jnp.asarray(masks)
+                self.state = spmd_init_state(shards, masks, self.n, self.cfg)
 
+        # per-round SyncVertexAllocations traffic (per device) — a pure
+        # function of the config, recorded as a cumulative trace counter
+        self._sync_bytes = (0 if mode == "single" else
+                            round_sync_payload_bytes(self.cfg, self.n,
+                                                     self.num_devices))
         self.snapshot = (RunSnapshot(snapshot_dir, self.cfg, self._graph_fp,
                                      keep=keep)
                         if snapshot_dir is not None else None)
@@ -242,19 +251,33 @@ class PartitionDriver:
         """
         if self.done:
             return self.rounds
-        if self.mode == "single":
-            self.state = jax.block_until_ready(ne_round_step(
-                self._graph, self.cfg, self.limit, self.state))
-        else:
-            self.state = jax.block_until_ready(spmd_round_step(
-                self.cfg, self.limit, self.n, self.mesh, self._u_sh,
-                self._v_sh, self._mask_sh, self.state))
-        self._result = None
-        self._final_slices = None
-        self._done = None
-        if (self.snapshot is not None and self.snapshot_every
-                and self.rounds % self.snapshot_every == 0):
-            self.save_snapshot()
+        tr = obs.get_tracer()
+        sp = (tr.span("round", cat="runtime") if tr is not None
+              else obs.NULL_SPAN)
+        # the round span covers the snapshot save too (nested "snapshot"
+        # span): per-round cost as a long run pays it, matching the old
+        # hand-timed round_secs the multihost_snap bench row diffs
+        with sp:
+            if self.mode == "single":
+                self.state = jax.block_until_ready(ne_round_step(
+                    self._graph, self.cfg, self.limit, self.state))
+            else:
+                self.state = jax.block_until_ready(spmd_round_step(
+                    self.cfg, self.limit, self.n, self.mesh, self._u_sh,
+                    self._v_sh, self._mask_sh, self.state))
+            if tr is not None:
+                sp.set(round=int(self.state.rounds))
+                rem = getattr(self.state, "remaining", None)
+                if rem is not None:
+                    tr.counter("edges_remaining", int(rem))
+                if self._sync_bytes:
+                    tr.add("sync_payload_bytes", self._sync_bytes)
+            self._result = None
+            self._final_slices = None
+            self._done = None
+            if (self.snapshot is not None and self.snapshot_every
+                    and self.rounds % self.snapshot_every == 0):
+                self.save_snapshot()
         return self.rounds
 
     def run(self) -> PartitionResult:
@@ -279,23 +302,25 @@ class PartitionDriver:
                 np.zeros((0,), np.int32), np.zeros((self.n, p_num), bool),
                 np.zeros((p_num,), np.int32), 0, 0)
             return self._result
-        if self.mode == "single":
-            edge_part = self.state.edge_part
-        elif self.multihost:
-            self._result = self._finalize_multihost()
+        with obs.span("finalize", cat="runtime", mode=self.mode):
+            if self.mode == "single":
+                edge_part = self.state.edge_part
+            elif self.multihost:
+                self._result = self._finalize_multihost()
+                return self._result
+            else:
+                ep_sh = np.asarray(self.state.edge_part)
+                edge_part = stitch_edge_part(ep_sh, self._dev, self.m)
+            vparts = self.state.vparts
+            if self.mode == "spmd" and self.cfg.use_pallas:
+                # SPMD round state keeps replica sets bit-packed; the
+                # result surface is always (N, P) bool
+                vparts = ne_ops.unpack_bits_np(np.asarray(vparts), p_num)
+            self._result = finalize_result(edge_part, vparts,
+                                           self.state.edges_per_part,
+                                           self._edges, self.cfg,
+                                           self.rounds)
             return self._result
-        else:
-            ep_sh = np.asarray(self.state.edge_part)
-            edge_part = stitch_edge_part(ep_sh, self._dev, self.m)
-        vparts = self.state.vparts
-        if self.mode == "spmd" and self.cfg.use_pallas:
-            # SPMD round state keeps replica sets bit-packed; the result
-            # surface is always (N, P) bool
-            vparts = ne_ops.unpack_bits_np(np.asarray(vparts), p_num)
-        self._result = finalize_result(edge_part, vparts,
-                                       self.state.edges_per_part,
-                                       self._edges, self.cfg, self.rounds)
-        return self._result
 
     def _owned_host_slices(self, arr) -> dict:
         """Host-side copies of the owned device slices of a (D, C) global
@@ -381,20 +406,22 @@ class PartitionDriver:
         """
         if self.snapshot is None:
             raise RuntimeError("driver was built without a snapshot_dir")
-        if self.multihost:
-            slices = {}
-            for sh in self.state.edge_part.addressable_shards:
-                i = sh.index[0].start or 0
-                slices[int(i)] = np.asarray(sh.data)[0]
+        with obs.span("snapshot", cat="runtime", round=self.rounds):
+            if self.multihost:
+                slices = {}
+                for sh in self.state.edge_part.addressable_shards:
+                    i = sh.index[0].start or 0
+                    slices[int(i)] = np.asarray(sh.data)[0]
+                fields = {k: np.asarray(v)
+                          for k, v in self.state._asdict().items()
+                          if k != "edge_part"}
+                return self.snapshot.save_state_multihost(
+                    self.rounds, fields, self.mode, self._host,
+                    {"edge_part": slices}, {"edge_part": self.num_devices},
+                    compat.barrier, fault_hook=self.snapshot_fault_hook)
             fields = {k: np.asarray(v)
-                      for k, v in self.state._asdict().items()
-                      if k != "edge_part"}
-            return self.snapshot.save_state_multihost(
-                self.rounds, fields, self.mode, self._host,
-                {"edge_part": slices}, {"edge_part": self.num_devices},
-                compat.barrier, fault_hook=self.snapshot_fault_hook)
-        fields = {k: np.asarray(v) for k, v in self.state._asdict().items()}
-        return self.snapshot.save_state(self.rounds, fields, self.mode)
+                      for k, v in self.state._asdict().items()}
+            return self.snapshot.save_state(self.rounds, fields, self.mode)
 
     def restore_snapshot(self, round_k: int | None = None) -> int:
         """Load round state from the snapshot store (latest by default).
@@ -408,7 +435,12 @@ class PartitionDriver:
         if self.snapshot is None:
             raise RuntimeError("driver was built without a snapshot_dir")
         if self.multihost:
-            return self._restore_multihost(round_k)
+            with obs.span("restore", cat="runtime"):
+                return self._restore_multihost(round_k)
+        with obs.span("restore", cat="runtime"):
+            return self._restore_single(round_k)
+
+    def _restore_single(self, round_k: int | None) -> int:
         fields, rnd, mode = self.snapshot.restore_state(round_k)
         if mode != self.mode:
             raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "

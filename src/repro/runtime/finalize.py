@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.epilogue import finalize_local, leftover_plan, \
     leftover_targets
+from repro.obs.trace import traced
 from repro.runtime.cluster import _read_raw, _write_raw
 
 
@@ -52,6 +53,7 @@ def _read_left(fin_dir, host: int) -> np.ndarray:
     return _read_raw(path, np.int64, (os.path.getsize(path) // 8,))
 
 
+@traced("stage_leftovers", cat="finalize")
 def stage_leftovers(fin_dir: str | os.PathLike, host: int,
                     ep_slices: dict, eids: dict) -> np.ndarray:
     """Write this host's sorted leftover eids to the shared finalize dir.
@@ -89,6 +91,7 @@ def leftover_ranks(fin_dir: str | os.PathLike, num_hosts: int, host: int,
     return ranks, total
 
 
+@traced("apply_leftovers", cat="finalize")
 def apply_leftovers(fin_dir: str | os.PathLike, host: int, num_hosts: int,
                     my_sorted: np.ndarray, ep_slices: dict, us: dict,
                     vs: dict, eids: dict, counts: np.ndarray, limit: int,

@@ -211,6 +211,8 @@ def worker_main(ns) -> int:
     initialize_distributed(ns.coordinator, ns.num_processes, ns.process_id)
     from repro.core.partitioner import NEConfig
     from repro.io.edgefile import EdgeFile
+    from repro.obs import report as obs_report
+    from repro.obs import trace as obs
     from repro.runtime.driver import PartitionDriver
 
     pid = jax.process_index()
@@ -223,12 +225,32 @@ def worker_main(ns) -> int:
         max_rounds=ns.max_rounds,
         seed=ns.seed,
     )
-    timing: dict = {
-        "process_id": pid,
-        "num_processes": int(jax.process_count()),
-        "devices": int(jax.device_count()),
-    }
-    t0 = time.time()
+    # one tracer per worker, always on: it is the single source of every
+    # published timing (perf_counter span durations — monotonic,
+    # NTP-immune; the meta line's start_unix is the only epoch stamp).
+    # With a trace dir it also streams the per-host JSONL log; without
+    # one the events stay in memory and only back timing.json.
+    trace_dir = getattr(ns, "trace_dir", None)
+    env_trace = os.environ.get("REPRO_TRACE", "")
+    if trace_dir is None and env_trace not in ("", "0"):
+        trace_dir = (
+            env_trace
+            if env_trace != "1"
+            else (os.path.join(ns.out, "trace") if ns.out else None)
+        )
+    log_path = (
+        os.path.join(trace_dir, obs.log_name(pid)) if trace_dir else None
+    )
+    tracer = obs.configure(
+        path=log_path,
+        process=pid,
+        meta={
+            "process_id": pid,
+            "num_processes": int(jax.process_count()),
+            "devices": int(jax.device_count()),
+        },
+    )
+    extra: dict = {}
     with EdgeFile(ns.edgefile) as ef:
         kwargs = dict(
             snapshot_every=ns.snapshot_every,
@@ -237,12 +259,11 @@ def worker_main(ns) -> int:
         )
         if ns.resume:
             drv = PartitionDriver.resume(ef, cfg, ns.snapshot_dir, **kwargs)
-            timing["resume_round"] = drv.rounds
+            extra["resume_round"] = drv.rounds
         else:
             drv = PartitionDriver(
                 ef, cfg, snapshot_dir=ns.snapshot_dir, **kwargs
             )
-        timing["ingest_secs"] = time.time() - t0
         if (
             ns.die_round >= 0
             and pid == ns.die_process
@@ -254,11 +275,8 @@ def worker_main(ns) -> int:
                     os._exit(EXIT_FAULT)
 
             drv.snapshot_fault_hook = fault_hook
-        round_secs = []
         while not drv.done:
-            t1 = time.time()
-            drv.step()
-            round_secs.append(time.time() - t1)
+            drv.step()  # records the per-round span + gauges
             if (
                 ns.die_round >= 0
                 and pid == ns.die_process
@@ -267,26 +285,27 @@ def worker_main(ns) -> int:
             ):
                 os._exit(EXIT_FAULT)
         res = drv.finalize()
-        timing["rounds"] = int(res.rounds)
-        timing["round_secs"] = round_secs
+        extra["rounds"] = int(res.rounds)
         if res.stats is not None:
             # quality metrics from the sharded epilogue's (P,)-sized
             # partials — computed without the global assignment
-            timing["replication_factor"] = res.stats.replication_factor
-            timing["edge_balance"] = res.stats.edge_balance
-            timing["vertex_balance"] = res.stats.vertex_balance
+            extra["replication_factor"] = res.stats.replication_factor
+            extra["edge_balance"] = res.stats.edge_balance
+            extra["vertex_balance"] = res.stats.vertex_balance
         if drv.snapshot is not None:
-            timing["snapshot_rounds"] = drv.snapshot.rounds()
+            extra["snapshot_rounds"] = drv.snapshot.rounds()
         if getattr(ns, "artifact_out", None):
             # cooperative multi-writer save: every process participates,
             # nobody materializes edge_part
-            drv.save_artifact(ns.artifact_out)
+            with obs.span("artifact_save", cat="runtime"):
+                drv.save_artifact(ns.artifact_out)
         if ns.out:
             # materializing the lazy edge_part runs the one deliberate
             # all-gather — a collective, so EVERY process forces it, not
             # just the writer (this dump is the test/debug surface; the
             # production output is --artifact-out)
-            edge_part = res.edge_part
+            with obs.span("gather_result", cat="runtime"):
+                edge_part = res.edge_part
             if pid == 0:
                 outd = Path(ns.out)
                 outd.mkdir(parents=True, exist_ok=True)
@@ -298,7 +317,9 @@ def worker_main(ns) -> int:
                     rounds=res.rounds,
                     leftover=res.leftover,
                 )
+                timing = obs_report.legacy_timing(tracer, extra)
                 (outd / "timing.json").write_text(json.dumps(timing))
+    tracer.close()  # flush this host's JSONL log (final RSS sample)
     compat.barrier("run-done")
     return 0
 

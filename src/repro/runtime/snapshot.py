@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.partitioner import NEConfig
 from repro.io.edgefile import EdgeFile
+from repro.obs import trace as obs
 from repro.train.checkpoint import CheckpointManager, fsync_path
 
 
@@ -112,7 +113,8 @@ class ShardedCheckpointManager(CheckpointManager):
                     "sha1": hashlib.sha1(raw).hexdigest()[:16],
                 })
             manifest["shards"][name] = entries
-        return self._publish(step, tmp, manifest)
+        with obs.span("snapshot_publish", cat="snapshot", step=step):
+            return self._publish(step, tmp, manifest)
 
     def load_shard(self, step: int, name: str, index: int,
                    verify: bool = True) -> np.ndarray:
@@ -239,7 +241,8 @@ class ShardedCheckpointManager(CheckpointManager):
         (tmp / ".manifest.partial.json").unlink()
         for hp in host_files:
             hp.unlink()
-        return self._publish(step, tmp, manifest)
+        with obs.span("snapshot_publish", cat="snapshot", step=step):
+            return self._publish(step, tmp, manifest)
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,7 @@ os.environ["XLA_FLAGS"] = (
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import json  # noqa: E402
+import shutil  # noqa: E402
 import subprocess  # noqa: E402
 import sys  # noqa: E402
 import tempfile  # noqa: E402
@@ -64,6 +65,8 @@ import jax  # noqa: E402
 from repro.core import NEConfig, evaluate  # noqa: E402
 from repro.dist.partitioner_sm import partition_spmd  # noqa: E402
 from repro.io.spill import spill_canonical_rmat  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import report as obs_report  # noqa: E402
 from repro.runtime import PartitionDriver, save_artifact  # noqa: E402
 from repro.runtime.snapshot import config_fingerprint  # noqa: E402
 from repro.runtime.snapshot import graph_fingerprint  # noqa: E402
@@ -169,16 +172,64 @@ with tempfile.TemporaryDirectory() as _td:
     k = max(int(ref.rounds) // 2, 1)
     out["kill_round"] = k
 
-    # A: uninterrupted N-process run
+    # A: uninterrupted N-process run, launched TRACED — bit-identity
+    # against the untraced in-process reference (checked below) proves
+    # instrumentation never perturbs the partition
+    trace_dir = td / "traceA"
     _, out_a = launch(
         td,
         "A",
-        ["--snapshot-dir", str(td / "snapA"), "--snapshot-every", "1"],
+        [
+            "--snapshot-dir",
+            str(td / "snapA"),
+            "--snapshot-every",
+            "1",
+            "--trace-dir",
+            str(trace_dir),
+        ],
     )
     res_a, timing_a = load(out_a)
     out["multihost_matches_spmd"] = identical(res_a, ref)
     out["multihost_rounds"] = int(res_a["rounds"])
     out["round_secs_mean"] = float(np.mean(timing_a["round_secs"][1:]))
+
+    # the traced run leaves the full telemetry artifact set: one JSONL
+    # log per host, a merged Perfetto-loadable Chrome trace, and a
+    # report with round percentiles, phase breakdown, collective payload
+    # bytes and per-host peak RSS
+    trace_logs = obs_export.host_logs(trace_dir)
+    out["trace_per_host_logs"] = len(trace_logs) == PROCS
+    merged_trace = td / "traceA_merged.json"
+    trace = obs_export.write_chrome_trace(merged_trace, trace_dir)
+    trace_evs = trace["traceEvents"]
+    out["trace_chrome_valid"] = bool(
+        merged_trace.exists()
+        and len({e["pid"] for e in trace_evs}) == PROCS
+        and any(
+            e["ph"] == "X" and e["name"] == "round" for e in trace_evs
+        )
+        and any(
+            e["ph"] == "X" and e["name"] == "ingest" for e in trace_evs
+        )
+    )
+    rep = obs_report.summarize_run(trace_dir)
+    out["report_fields_ok"] = bool(
+        rep["rounds"] is not None
+        and rep["rounds"]["count"] == int(res_a["rounds"]) * PROCS
+        and 0 <= rep["rounds"]["p50_s"] <= rep["rounds"]["p99_s"]
+        and "ingest" in rep["phases"]
+        and "finalize" in rep["phases"]
+        and rep["counters"]["sync_payload_bytes"]["last"] > 0
+        and all(h.get("peak_rss_kb") for h in rep["hosts"].values())
+    )
+    art_dest = os.environ.get("MULTIHOST_ARTIFACTS")
+    if art_dest:
+        dest = Path(art_dest)
+        dest.mkdir(parents=True, exist_ok=True)
+        shutil.copy(merged_trace, dest / "trace_merged.json")
+        (dest / "report.txt").write_text(obs_report.render(rep))
+        for p in trace_logs:
+            shutil.copy(p, dest / p.name)
 
     # the sharded epilogue's collective-combined metrics == evaluate()
     # of the reference assignment
@@ -338,6 +389,9 @@ out["torn_round_skipped"] = (
 
 CHECKS = [
     "multihost_matches_spmd",
+    "trace_per_host_logs",
+    "trace_chrome_valid",
+    "report_fields_ok",
     "stats_match",
     "kill_job_failed",
     "kill_resume_round_correct",

@@ -89,6 +89,18 @@ def test_multiwriter_artifact_bit_identical(mh_results):
     assert mh_results["artifact_bit_identical"]
 
 
+def test_traced_run_artifacts(mh_results):
+    """Run A is launched with --trace-dir: every host leaves its JSONL
+    event log, the logs merge into one Perfetto-loadable Chrome trace,
+    and the report carries round percentiles, per-phase breakdown,
+    collective payload bytes and per-host peak RSS — while the partition
+    stays bit-identical to the untraced reference (the A identity check
+    covers that)."""
+    assert mh_results["trace_per_host_logs"]
+    assert mh_results["trace_chrome_valid"]
+    assert mh_results["report_fields_ok"]
+
+
 def test_distributed_metrics_match_evaluate(mh_results):
     """Replication factor / edge balance from the sharded epilogue's
     (P,)-sized partials equal evaluate() of the full assignment."""
