@@ -6,6 +6,9 @@ can afford to snapshot.  Rows:
 
   runtime/round_plain        per-round step time, no snapshots
   runtime/round_snap         per-round step time, snapshot every round
+  runtime/live_overhead      per-round cost of the live metrics bus
+                             (quality reduction + one flushed JSONL line);
+                             smoke-gated at <5% and bit-identity
   runtime/snapshot_overhead  the delta — pure snapshot cost per round
   runtime/resume_restore     latency from PartitionDriver.resume() call to
                              a stepped-and-ready driver (ingest + restore)
@@ -128,6 +131,31 @@ def main(fast: bool = False, smoke: bool = False):
             assert t_traced - t_plain <= slack, (
                 f"tracing overhead {t_traced - t_plain:.6f}s/round exceeds "
                 f"{slack:.6f}s (plain {t_plain:.6f}s)")
+
+        # live-metrics overhead: the identical run with the metrics bus
+        # publishing a per-round snapshot (one jitted quality reduction
+        # + one flushed JSONL line).  Same gate as tracing: <5% of the
+        # round budget and bit-identical output — monitoring a
+        # production run must be free to turn on.
+        from repro.obs import live as obs_live
+
+        obs_live.configure(Path(td) / "live", process=0,
+                           meta={"bench": "runtime"})
+        drv_l = PartitionDriver(g, cfg)
+        drv_l.step()
+        t0 = time.time()
+        res_l = drv_l.run()
+        t_live = (time.time() - t0) / max(res_l.rounds - 1, 1)
+        obs_live.disable()
+        record("runtime/live_overhead", (t_live - t_plain) * 1e6,
+               f"+{(t_live - t_plain) / max(t_plain, 1e-12) * 100:.2f}%")
+        assert (res_l.edge_part == res.edge_part).all(), \
+            "monitored run diverged from unmonitored run"
+        if smoke:
+            slack = max(t_plain * 0.05, 5e-4)
+            assert t_live - t_plain <= slack, (
+                f"live-metrics overhead {t_live - t_plain:.6f}s/round "
+                f"exceeds {slack:.6f}s (plain {t_plain:.6f}s)")
 
         snap_dir = Path(td) / "snap"
         drv_s = PartitionDriver(g, cfg, snapshot_dir=snap_dir,

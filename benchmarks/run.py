@@ -11,7 +11,9 @@ the run failed and the driver exits 1; an ``--only``/``--smoke``
 selection that matches *nothing* exits 2 instead of reporting success
 having run nothing; ``--compare`` against a prior BENCH_*.json exits 3
 when any shared row regressed by more than 25% (CI treats 3 as
-advisory — noise-prone micro rows must not block merges).
+advisory — noise-prone micro rows must not block merges);
+``--compare-md`` appends the same deltas as a markdown table, which CI
+points at ``$GITHUB_STEP_SUMMARY``.
 """
 from __future__ import annotations
 
@@ -28,28 +30,56 @@ SMOKE_SUITES = ("theory", "memory", "spmd", "runtime",
                 "kernels")  # tiny CI drift gate
 
 
-def compare_rows(rows, prior_path: str) -> list[tuple]:
-    """Print per-row deltas vs a committed BENCH_*.json; return the rows
-    that regressed by more than :data:`REGRESSION_PCT` percent."""
+def compare_rows(rows, prior_path: str) -> tuple[list, list]:
+    """Print per-row deltas vs a committed BENCH_*.json.
+
+    Returns ``(deltas, regressions)``: every comparable-or-new row as
+    ``(name, old_us, new_us, pct)`` (``old_us``/``pct`` are None for new
+    rows), and the subset that regressed by more than
+    :data:`REGRESSION_PCT` percent."""
     import json
 
     with open(prior_path) as f:
         prior = {r["name"]: float(r["us_per_call"]) for r in json.load(f)}
-    regressions = []
+    deltas, regressions = [], []
     print(f"\n--- compare vs {prior_path} ---")
     for name, us, _derived in rows:
         old = prior.get(name)
         if old is None:
             print(f"{name}: (new) {us:.1f}us")
+            deltas.append((name, None, us, None))
             continue
         if old <= 0:
             continue
         pct = (us - old) / old * 100.0
         flag = "  REGRESSION" if pct > REGRESSION_PCT else ""
         print(f"{name}: {old:.1f}us -> {us:.1f}us ({pct:+.1f}%){flag}")
+        deltas.append((name, old, us, pct))
         if pct > REGRESSION_PCT:
             regressions.append((name, old, us, pct))
-    return regressions
+    return deltas, regressions
+
+
+def write_compare_md(path: str, deltas: list, prior_path: str) -> None:
+    """Append the compare deltas as a GitHub-flavored markdown table —
+    the ``$GITHUB_STEP_SUMMARY`` payload of the CI bench job (append, not
+    truncate: the summary file is shared by every step of the job)."""
+    lines = [
+        f"### Benchmark deltas vs `{os.path.basename(prior_path)}`",
+        "",
+        "| row | prior (µs) | now (µs) | delta |",
+        "| --- | ---: | ---: | ---: |",
+    ]
+    for name, old, us, pct in deltas:
+        if old is None:
+            lines.append(f"| `{name}` | — | {us:.1f} | new |")
+        else:
+            flag = " ⚠️" if pct > REGRESSION_PCT else ""
+            lines.append(
+                f"| `{name}` | {old:.1f} | {us:.1f} | {pct:+.1f}%{flag} |"
+            )
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
 
 
 def main() -> None:
@@ -70,6 +100,10 @@ def main() -> None:
     ap.add_argument("--compare", default=None,
                     help="prior BENCH_*.json: print per-row deltas; exit 3 "
                          f"when a shared row slowed by >{REGRESSION_PCT:.0f}%%")
+    ap.add_argument("--compare-md", default=None,
+                    help="append the --compare deltas as a markdown table "
+                         "to this file (CI points it at "
+                         "$GITHUB_STEP_SUMMARY)")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -151,7 +185,9 @@ def main() -> None:
         print(f"trace written to {args.trace}", file=sys.stderr)
     regressions = []
     if args.compare:
-        regressions = compare_rows(ROWS, args.compare)
+        deltas, regressions = compare_rows(ROWS, args.compare)
+        if args.compare_md:
+            write_compare_md(args.compare_md, deltas, args.compare)
     if not ran:
         print("no suites selected — selection bug, not success",
               file=sys.stderr)

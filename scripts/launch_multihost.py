@@ -85,6 +85,13 @@ def build_parser() -> argparse.ArgumentParser:
         "(merge with scripts/report_run.py; also enabled by the "
         "REPRO_TRACE env var)",
     )
+    job.add_argument(
+        "--metrics-dir",
+        default=None,
+        help="publish one metrics_hNNN.jsonl live-metrics stream per "
+        "worker here (watch with scripts/monitor_run.py; also enabled "
+        "by the REPRO_LIVE_METRICS env var)",
+    )
 
     cl = ap.add_argument_group("cluster")
     cl.add_argument("--num-processes", type=int, default=2)

@@ -269,6 +269,50 @@ def spmd_done(state: SpmdState, cfg: NEConfig) -> bool:
                 or int(state.rounds) >= cfg.max_rounds)
 
 
+@partial(jax.jit, static_argnames=("p_num",))
+def _quality_reduce(vparts: Array, degree_rest: Array, p_num: int):
+    """The (P,)-and-scalar reduction behind the live quality gauges.
+
+    One fused pass over the replicated replica map: per-partition replica
+    counts |V(E_p)|, the boundary-set size (vertices already replicated
+    somewhere but still carrying unallocated degree — the frontier the
+    next round's two-hop allocation expands from), and ΣD_rest.  Packed
+    (uint32-word) replica sets unpack inside the jit, exactly as the
+    round itself does for selection, so the gauge is cheap relative to a
+    round on either representation.  No collectives: under multihost the
+    inputs are fully replicated, so every worker computes the identical
+    answer locally and no global state is ever gathered.
+    """
+    if vparts.dtype == jnp.uint32:
+        vparts = ne_ops.unpack_bits(vparts, p_num)
+    vrep = jnp.sum(vparts, axis=0, dtype=jnp.int32)              # (P,)
+    boundary = jnp.sum(vparts.any(axis=1) & (degree_rest > 0),
+                       dtype=jnp.int32)
+    degree_sum = jnp.sum(degree_rest, dtype=jnp.int32)
+    return vrep, boundary, degree_sum
+
+
+def round_quality(cfg: NEConfig, state, n: int) -> dict:
+    """Live quality gauges from a round state (SpmdState or NEState).
+
+    Same math as :func:`repro.core.metrics.stats_from_counts` over the
+    current replica/edge counts — so at the fixed point (no leftover
+    edges) the live values equal the finalized artifact's metrics, which
+    the multihost integration checks assert to 1e-6.  ``degree_sum``
+    rides along because ΣD_rest/2 is the single-controller
+    edges-remaining gauge (NEState has no ``remaining`` field).
+    """
+    vrep_d, boundary, degree_sum = _quality_reduce(
+        state.vparts, state.degree_rest, cfg.num_partitions)
+    vrep = np.asarray(vrep_d, np.int64)
+    counts = np.asarray(state.edges_per_part, np.int64)
+    rf = float(vrep.sum()) / float(max(n, 1))
+    eb = float(counts.max()) / max(float(counts.mean()), 1e-9)
+    vb = float(vrep.max()) / max(float(vrep.mean()), 1e-9)
+    return {"rf": rf, "eb": eb, "vb": vb, "boundary": int(boundary),
+            "degree_sum": int(degree_sum)}
+
+
 def round_sync_payload_bytes(cfg: NEConfig, n: int, num_dev: int) -> int:
     """Per-device bytes one round's SyncVertexAllocations moves.
 

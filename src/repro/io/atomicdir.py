@@ -47,4 +47,26 @@ def publish_dir(tmp: Path, final: Path) -> None:
     fsync_path(final.parent)
 
 
-__all__ = ["fsync_path", "publish_dir"]
+def publish_file(final: Path, data: bytes | str) -> None:
+    """Atomically publish a single file's contents at ``final``.
+
+    The single-file twin of :func:`publish_dir`: stage to a dot-tmp
+    sibling, fsync, rename over the target, fsync the parent.  A reader
+    either sees the previous complete contents or the new complete
+    contents — never a torn write.  Used for the live-metrics bus
+    manifest (``repro.obs.live``), where a monitor may attach at any
+    instant, including mid-publish.
+    """
+    final = Path(final)
+    final.parent.mkdir(parents=True, exist_ok=True)
+    tmp = final.parent / f".tmp_{final.name}"
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(tmp, mode) as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.rename(final)
+    fsync_path(final.parent)
+
+
+__all__ = ["fsync_path", "publish_dir", "publish_file"]

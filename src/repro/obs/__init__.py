@@ -3,9 +3,12 @@
 Round-level tracing (nested spans + counters → per-host JSONL logs,
 ``trace``), one shared peak-RSS implementation (``rss``), Chrome
 ``trace_event`` / Perfetto export plus the optional ``jax.profiler``
-window (``export``), and run-directory aggregation into per-phase /
-per-round summaries (``report``).  See docs/DESIGN-observability.md for
-the event schema and span taxonomy.
+window (``export``), run-directory aggregation into per-phase /
+per-round summaries (``report``), and the live side: the store-backed
+per-host metrics bus (``live``) plus the stall/straggler monitor and
+Prometheus exposition behind ``scripts/monitor_run.py`` (``monitor``).
+See docs/DESIGN-observability.md for the event schema, span taxonomy
+and live-bus snapshot schema.
 
 Tracing is off by default and near-zero cost when off: the module-level
 ``trace.span`` / ``trace.counter`` front door checks one global.  Turn
@@ -45,6 +48,17 @@ _EXPORTS = {
     "legacy_timing": "repro.obs.report",
     "render": "repro.obs.report",
     "summarize_run": "repro.obs.report",
+    "LiveBus": "repro.obs.live",
+    "host_metrics": "repro.obs.live",
+    "live_enabled": "repro.obs.live",
+    "load_snapshots": "repro.obs.live",
+    "metrics_name": "repro.obs.live",
+    "publish": "repro.obs.live",
+    "tail_snapshots": "repro.obs.live",
+    "BusMonitor": "repro.obs.monitor",
+    "MonitorConfig": "repro.obs.monitor",
+    "render_dashboard": "repro.obs.monitor",
+    "render_prometheus": "repro.obs.monitor",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -19,6 +19,7 @@ from __future__ import annotations
 import contextlib
 import json
 import os
+import warnings
 from pathlib import Path
 
 
@@ -59,8 +60,11 @@ def merge_events(paths) -> tuple[list[dict], list[dict]]:
 
     Returns ``(metas, events)``: the per-host meta records, and every
     span/counter event with an added ``ts_abs`` (microseconds since the
-    earliest host's start), sorted by ``ts_abs``.  Events from a log
-    with no meta line anchor at offset 0.
+    earliest host's start), sorted by ``ts_abs``.  A log with no meta
+    anchor line (its host was killed before the first batch flush)
+    cannot be placed on the shared axis — its events are skipped with a
+    warning rather than failing the whole merge; the surviving hosts'
+    telemetry is exactly what a post-mortem needs.
     """
     logs = [(p, load_events(p)) for p in paths]
     metas, timed = [], []
@@ -73,7 +77,14 @@ def merge_events(paths) -> tuple[list[dict], list[dict]]:
             starts[id(events)] = float(meta.get("start_unix", 0.0))
     base = min(starts.values(), default=0.0)
     for path, events in logs:
-        off_us = (starts.get(id(events), base) - base) * 1e6
+        if id(events) not in starts:
+            warnings.warn(
+                f"{os.fspath(path)} has no meta anchor line (host killed "
+                f"before its first flush?) — skipping its "
+                f"{len(events)} event(s) in the merged timeline",
+                stacklevel=2)
+            continue
+        off_us = (starts[id(events)] - base) * 1e6
         for e in events:
             if e.get("ev") in ("span", "counter"):
                 e = dict(e, ts_abs=round(e.get("ts", 0.0) + off_us, 1))

@@ -27,6 +27,12 @@ CUMULATIVE = ("sync_payload_bytes",)
 
 def _pcts(durs_us) -> dict:
     d = np.asarray(durs_us, dtype=np.float64) / 1e6
+    if d.size == 0:
+        # a run killed before its first round completes (or a trace of a
+        # phase that never ran) still reports cleanly: null percentiles,
+        # not a numpy empty-reduction crash
+        return {"count": 0, "total_s": 0.0, "mean_s": None, "p50_s": None,
+                "p90_s": None, "p99_s": None, "max_s": None}
     return {"count": int(d.size), "total_s": float(d.sum()),
             "mean_s": float(d.mean()), "p50_s": float(np.percentile(d, 50)),
             "p90_s": float(np.percentile(d, 90)),
@@ -68,15 +74,48 @@ def summarize_events(metas: list[dict], events: list[dict]) -> dict:
     report = {
         "hosts": hosts,
         "phases": {n: _pcts(d) for n, d in sorted(phases.items())},
-        "rounds": _pcts(rounds) if rounds else None,
+        "rounds": _pcts(rounds),
         "counters": counters,
     }
     return report
 
 
+def summarize_live(paths) -> dict:
+    """Aggregate per-host live-metrics streams (``repro.obs.live``).
+
+    The bus shares the report's schema conventions (meta anchor line,
+    per-host pid files), so a finished run's metrics files summarize
+    exactly like a trace: per-host snapshot counts, last round, final
+    live quality gauges, and whether the host reached its ``done``
+    snapshot (a host that never did is where the run wedged).
+    """
+    from repro.obs import live
+
+    hosts: dict[int, dict] = {}
+    for p in paths:
+        snaps = live.load_snapshots(p)
+        meta = next((s for s in snaps if s.get("ev") == "meta"), None)
+        hb = [s for s in snaps if s.get("ev") == "hb"]
+        pid = int((meta or (hb[-1] if hb else {})).get("pid", 0))
+        last = hb[-1] if hb else {}
+        hosts[pid] = {
+            "snapshots": len(hb),
+            "last_round": last.get("round"),
+            "last_phase": last.get("phase"),
+            "done": bool(last.get("done")),
+            "rf": last.get("rf"), "eb": last.get("eb"),
+            "vb": last.get("vb"),
+            "rss_peak_kb": last.get("rss_peak_kb"),
+            "sync_payload_bytes": last.get("sync_payload_bytes"),
+        }
+    return {"hosts": hosts}
+
+
 def summarize_run(run_dir: str | os.PathLike) -> dict:
     """Aggregate every ``trace_h*.jsonl`` under ``run_dir`` (and a
-    ``timing.json`` if one is published there) into the report dict."""
+    ``timing.json`` if one is published there) into the report dict.
+    When the run also published live metrics (``metrics_h*.jsonl``),
+    their summary rides along under ``"live"``."""
     logs = export.host_logs(run_dir)
     if not logs:
         raise FileNotFoundError(
@@ -89,6 +128,11 @@ def summarize_run(run_dir: str | os.PathLike) -> dict:
     timing = Path(run_dir) / "timing.json"
     if timing.exists():
         report["timing"] = json.loads(timing.read_text())
+    from repro.obs import live
+
+    metrics = live.host_metrics(run_dir)
+    if metrics:
+        report["live"] = summarize_live(metrics)
     return report
 
 
@@ -152,7 +196,7 @@ def render(report: dict) -> str:
         lines.append(f"{pid:>4}  {peak:>10}  {desc}")
     lines.append("")
     rounds = report.get("rounds")
-    if rounds:
+    if rounds and rounds["count"]:
         lines.append(
             f"rounds: {rounds['count']}  "
             f"p50={rounds['p50_s'] * 1e3:.1f}ms  "
@@ -177,8 +221,22 @@ def render(report: dict) -> str:
             if name.endswith("bytes"):
                 last, mx = _fmt_bytes(last), _fmt_bytes(mx)
             lines.append(f"{name:<22}{last:>14}{mx:>14}{c['samples']:>6}")
+    live_hosts = report.get("live", {}).get("hosts", {})
+    if live_hosts:
+        lines.append("")
+        lines.append("live bus — final snapshot per host")
+        lines.append(f"{'host':>4}{'snaps':>7}{'round':>7}{'done':>6}"
+                     f"{'rf':>8}{'eb':>7}")
+        for pid in sorted(live_hosts):
+            h = live_hosts[pid]
+            rf = f"{h['rf']:.3f}" if h.get("rf") is not None else "-"
+            eb = f"{h['eb']:.2f}" if h.get("eb") is not None else "-"
+            rnd = h.get("last_round")
+            lines.append(f"{pid:>4}{h['snapshots']:>7}"
+                         f"{rnd if rnd is not None else '-':>7}"
+                         f"{'yes' if h['done'] else 'NO':>6}{rf:>8}{eb:>7}")
     return "\n".join(lines)
 
 
 __all__ = ["CUMULATIVE", "legacy_timing", "render", "summarize_events",
-           "summarize_run"]
+           "summarize_live", "summarize_run"]

@@ -54,7 +54,7 @@ from repro.core.partitioner import (NEConfig, NEState, PartitionResult,
                                     alpha_limit, finalize_result, ne_done,
                                     ne_init_state, ne_round_step)
 from repro.dist import compat
-from repro.dist.partitioner_sm import (AXIS, SpmdState,
+from repro.dist.partitioner_sm import (AXIS, SpmdState, round_quality,
                                        round_sync_payload_bytes, spmd_done,
                                        spmd_init_state, spmd_round_step,
                                        stitch_edge_part)
@@ -62,6 +62,7 @@ from repro.io.edgefile import EdgeFile
 from repro.kernels.ne_round import ops as ne_ops
 from repro.io.stream import require_canonical
 from repro.launch.mesh import make_edge_mesh
+from repro.obs import live
 from repro.obs import trace as obs
 from repro.runtime import cluster
 from repro.runtime.artifact import PartitionArtifact, save_artifact
@@ -140,6 +141,9 @@ class PartitionDriver:
         self._sync_bytes = (0 if mode == "single" else
                             round_sync_payload_bytes(self.cfg, self.n,
                                                      self.num_devices))
+        self._sync_total = 0
+        if live.live_enabled():
+            live.publish(phase="ingest", round=0, edges_remaining=self.m)
         self.snapshot = (RunSnapshot(snapshot_dir, self.cfg, self._graph_fp,
                                      keep=keep)
                         if snapshot_dir is not None else None)
@@ -272,6 +276,19 @@ class PartitionDriver:
                     tr.counter("edges_remaining", int(rem))
                 if self._sync_bytes:
                     tr.add("sync_payload_bytes", self._sync_bytes)
+            self._sync_total += self._sync_bytes
+            if live.live_enabled():
+                # pure read of the replicated state (no RNG, no mutation),
+                # so monitored runs stay bit-identical to unmonitored
+                q = round_quality(self.cfg, self.state, self.n)
+                rem = getattr(self.state, "remaining", None)
+                rem = (int(rem) if rem is not None
+                       else q["degree_sum"] // 2)
+                live.publish(phase="round", round=int(self.state.rounds),
+                             edges_remaining=rem,
+                             sync_payload_bytes=self._sync_total,
+                             rf=q["rf"], eb=q["eb"], vb=q["vb"],
+                             boundary=q["boundary"])
             self._result = None
             self._final_slices = None
             self._done = None
@@ -301,12 +318,14 @@ class PartitionDriver:
             self._result = PartitionResult(
                 np.zeros((0,), np.int32), np.zeros((self.n, p_num), bool),
                 np.zeros((p_num,), np.int32), 0, 0)
+            self._publish_live_done()
             return self._result
         with obs.span("finalize", cat="runtime", mode=self.mode):
             if self.mode == "single":
                 edge_part = self.state.edge_part
             elif self.multihost:
                 self._result = self._finalize_multihost()
+                self._publish_live_done()
                 return self._result
             else:
                 ep_sh = np.asarray(self.state.edge_part)
@@ -320,7 +339,23 @@ class PartitionDriver:
                                            self.state.edges_per_part,
                                            self._edges, self.cfg,
                                            self.rounds)
+            self._publish_live_done()
             return self._result
+
+    def _publish_live_done(self):
+        """Terminal bus snapshot: the finalized (post-cleanup) quality,
+        flagged ``done`` so the monitor can distinguish a finished run
+        from a stalled one."""
+        if not live.live_enabled():
+            return
+        st = self._result.stats if self._result is not None else None
+        live.publish(
+            phase="done", round=self.rounds, edges_remaining=0,
+            sync_payload_bytes=self._sync_total,
+            rf=st.replication_factor if st is not None else None,
+            eb=st.edge_balance if st is not None else None,
+            vb=st.vertex_balance if st is not None else None,
+            done=True)
 
     def _owned_host_slices(self, arr) -> dict:
         """Host-side copies of the owned device slices of a (D, C) global

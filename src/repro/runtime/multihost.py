@@ -211,6 +211,7 @@ def worker_main(ns) -> int:
     initialize_distributed(ns.coordinator, ns.num_processes, ns.process_id)
     from repro.core.partitioner import NEConfig
     from repro.io.edgefile import EdgeFile
+    from repro.obs import live
     from repro.obs import report as obs_report
     from repro.obs import trace as obs
     from repro.runtime.driver import PartitionDriver
@@ -250,6 +251,36 @@ def worker_main(ns) -> int:
             "devices": int(jax.device_count()),
         },
     )
+    # live metrics bus (repro.obs.live): each worker publishes its own
+    # heartbeat/quality stream to the shared metrics dir; never a
+    # collective, so enabling it on all workers uniformly (launcher flag
+    # or env, both gang-wide) keeps the run bit-identical to unmonitored.
+    metrics_dir = getattr(ns, "metrics_dir", None)
+    env_live = os.environ.get("REPRO_LIVE_METRICS", "")
+    if metrics_dir is None and env_live not in ("", "0"):
+        metrics_dir = (
+            env_live
+            if env_live != "1"
+            else (os.path.join(ns.out, live.BUS_DIRNAME) if ns.out else None)
+        )
+    if metrics_dir is not None:
+        manifest = None
+        if pid == 0:  # one atomic run.json, from the lowest-rank worker
+            manifest = {
+                "num_processes": int(jax.process_count()),
+                "devices": int(jax.device_count()),
+                "partitions": ns.partitions,
+                "edgefile": os.fspath(ns.edgefile),
+            }
+        live.configure(
+            metrics_dir,
+            process=pid,
+            meta={
+                "process_id": pid,
+                "num_processes": int(jax.process_count()),
+            },
+            manifest=manifest,
+        )
     extra: dict = {}
     with EdgeFile(ns.edgefile) as ef:
         kwargs = dict(
@@ -320,6 +351,7 @@ def worker_main(ns) -> int:
                 timing = obs_report.legacy_timing(tracer, extra)
                 (outd / "timing.json").write_text(json.dumps(timing))
     tracer.close()  # flush this host's JSONL log (final RSS sample)
+    live.disable()  # close this worker's metrics stream (no-op when off)
     compat.barrier("run-done")
     return 0
 

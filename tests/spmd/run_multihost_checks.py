@@ -5,7 +5,11 @@ through the full failure matrix against a single-process 8-device
 reference computed in this interpreter:
 
   A. uninterrupted N-process run         -> bit-identical to partition_spmd
-  B. kill worker 1 after the round-k snapshot published (job dies)
+     (traced + live metrics bus on; a monitor attached WHILE it runs
+     must see every host heartbeat with strictly monotone rounds, and
+     the last live replication factor must equal the finalized metric)
+  B. kill worker 1 after the round-k snapshot published (job dies);
+     a monitor attached to the dead bus must exit STALLED
   C. resume B                            -> bit-identical, from round k
   D. kill worker 1 mid-save (shards staged, never published)
   E. resume D                            -> bit-identical, from round k-1
@@ -43,12 +47,14 @@ import shutil  # noqa: E402
 import subprocess  # noqa: E402
 import sys  # noqa: E402
 import tempfile  # noqa: E402
+import time  # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import numpy as np  # noqa: E402
 
 ROOT = Path(__file__).resolve().parents[2]
 SCRIPT = ROOT / "scripts" / "launch_multihost.py"
+MONITOR = ROOT / "scripts" / "monitor_run.py"
 sys.path.insert(0, str(ROOT / "src"))
 
 ap = argparse.ArgumentParser()
@@ -66,6 +72,8 @@ from repro.core import NEConfig, evaluate  # noqa: E402
 from repro.dist.partitioner_sm import partition_spmd  # noqa: E402
 from repro.io.spill import spill_canonical_rmat  # noqa: E402
 from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import live as obs_live  # noqa: E402
+from repro.obs import monitor as obs_mon  # noqa: E402
 from repro.obs import report as obs_report  # noqa: E402
 from repro.runtime import PartitionDriver, save_artifact  # noqa: E402
 from repro.runtime.snapshot import config_fingerprint  # noqa: E402
@@ -81,17 +89,9 @@ CFG = NEConfig(num_partitions=8, seed=0, k_sel=64, edge_chunk=1 << 12)
 out = {"devices": len(jax.devices()), "procs": PROCS, "scale": SCALE}
 
 
-def launch(
-    td,
-    name,
-    extra,
-    expect_fail=False,
-    procs=None,
-    devices=None,
-    with_out=True,
-    env_extra=None,
+def _launch_args(
+    td, name, extra, expect_fail, procs, devices, with_out, env_extra
 ):
-    """One parent invocation of the launcher; returns (rc, out_dir)."""
     procs = procs or PROCS
     if devices is None:
         devices = 8 // procs
@@ -127,6 +127,23 @@ def launch(
     env["PYTHONPATH"] = str(ROOT / "src")
     if env_extra:
         env.update(env_extra)
+    return args, env, out_dir
+
+
+def launch(
+    td,
+    name,
+    extra,
+    expect_fail=False,
+    procs=None,
+    devices=None,
+    with_out=True,
+    env_extra=None,
+):
+    """One parent invocation of the launcher; returns (rc, out_dir)."""
+    args, env, out_dir = _launch_args(
+        td, name, extra, expect_fail, procs, devices, with_out, env_extra
+    )
     proc = subprocess.run(
         args, capture_output=True, text=True, timeout=1800, env=env
     )
@@ -135,6 +152,26 @@ def launch(
         print(proc.stderr[-4000:], file=sys.stderr)
         raise RuntimeError(f"run {name} failed rc={proc.returncode}")
     return proc.returncode, out_dir
+
+
+def launch_async(td, name, extra, **kw):
+    """Popen the launcher so a monitor can attach while it runs."""
+    args, env, out_dir = _launch_args(
+        td,
+        name,
+        extra,
+        False,
+        kw.get("procs"),
+        kw.get("devices"),
+        True,
+        kw.get("env_extra"),
+    )
+    log_path = td / f"parent_{name}.log"
+    with open(log_path, "w") as log_fh:  # child inherits the descriptor
+        proc = subprocess.Popen(
+            args, stdout=log_fh, stderr=subprocess.STDOUT, env=env
+        )
+    return proc, out_dir, log_path
 
 
 def load(out_dir):
@@ -172,11 +209,15 @@ with tempfile.TemporaryDirectory() as _td:
     k = max(int(ref.rounds) // 2, 1)
     out["kill_round"] = k
 
-    # A: uninterrupted N-process run, launched TRACED — bit-identity
-    # against the untraced in-process reference (checked below) proves
-    # instrumentation never perturbs the partition
+    # A: uninterrupted N-process run, launched TRACED and with the live
+    # metrics bus on — bit-identity against the untraced, unmonitored
+    # in-process reference (checked below) proves instrumentation never
+    # perturbs the partition.  A monitor attaches WHILE the job runs:
+    # the contract is >=1 heartbeat per host observed live, strictly
+    # monotone rounds, and a healthy live-attach CLI verdict.
     trace_dir = td / "traceA"
-    _, out_a = launch(
+    live_a = td / "liveA"
+    proc_a, out_a, log_a = launch_async(
         td,
         "A",
         [
@@ -186,12 +227,87 @@ with tempfile.TemporaryDirectory() as _td:
             "1",
             "--trace-dir",
             str(trace_dir),
+            "--metrics-dir",
+            str(live_a),
         ],
     )
+    # rounds can take arbitrarily long on first compile, so the stall
+    # thresholds are effectively off — this attach checks
+    # *observability*, not latency
+    mon_cli = [
+        sys.executable,
+        str(MONITOR),
+        str(live_a),
+        "--once",
+        "--json",
+        "--stall-after",
+        "1e9",
+        "--dead-after",
+        "1e9",
+    ]
+    mon = obs_mon.BusMonitor(
+        live_a, obs_mon.MonitorConfig(stall_after=1e9, dead_after=1e9)
+    )
+    live_hb_seen = {}  # pid -> max hb seq observed while the job was alive
+    live_cli_rc = None  # monitor_run.py --once verdict, attached mid-run
+    deadline = time.time() + 1800
+    while proc_a.poll() is None:
+        if time.time() > deadline:
+            proc_a.kill()
+            raise RuntimeError("run A timed out")
+        mon.poll()
+        for pid, t in mon.tails.items():
+            if t.last is not None:
+                live_hb_seen[pid] = max(
+                    live_hb_seen.get(pid, 0), int(t.last.get("seq") or 0)
+                )
+        if live_cli_rc is None and len(live_hb_seen) == PROCS:
+            cp = subprocess.run(
+                mon_cli, capture_output=True, text=True, timeout=120
+            )
+            live_cli_rc = cp.returncode
+        time.sleep(0.2)
+    if proc_a.returncode != 0:
+        print(log_a.read_text()[-4000:], file=sys.stderr)
+        raise RuntimeError(f"run A failed rc={proc_a.returncode}")
+    mon.poll()
+    if live_cli_rc is None:  # run finished before the attach window opened
+        cp = subprocess.run(
+            mon_cli, capture_output=True, text=True, timeout=120
+        )
+        live_cli_rc = cp.returncode
+    final_live = mon.assess()
     res_a, timing_a = load(out_a)
     out["multihost_matches_spmd"] = identical(res_a, ref)
     out["multihost_rounds"] = int(res_a["rounds"])
     out["round_secs_mean"] = float(np.mean(timing_a["round_secs"][1:]))
+
+    # live-monitor acceptance: every host heartbeat while the job was
+    # still running, rounds strictly monotone, everyone reached done,
+    # and the live-attached CLI judged the run healthy/done (exit 0)
+    out["monitor_hosts_ok"] = bool(
+        len(final_live["hosts"]) == PROCS
+        and all(h["done"] for h in final_live["hosts"].values())
+        and len(live_hb_seen) == PROCS
+        and all(v >= 1 for v in live_hb_seen.values())
+    )
+    out["monitor_rounds_monotone"] = bool(
+        mon.tails
+        and all(
+            t.rounds_monotone() and len(t.rounds_seen) >= 1
+            for t in mon.tails.values()
+        )
+    )
+    # the last round-phase gauge is computed from the replicated state
+    # at the fixed point, so it must equal the finalized artifact metric
+    last_rfs = [t.history[-1]["rf"] for t in mon.tails.values() if t.history]
+    out["monitor_rf_matches_final"] = bool(
+        len(last_rfs) == PROCS
+        and all(
+            abs(rf - timing_a["replication_factor"]) < 1e-6 for rf in last_rfs
+        )
+    )
+    out["monitor_live_exit"] = live_cli_rc == 0
 
     # the traced run leaves the full telemetry artifact set: one JSONL
     # log per host, a merged Perfetto-loadable Chrome trace, and a
@@ -230,6 +346,11 @@ with tempfile.TemporaryDirectory() as _td:
         (dest / "report.txt").write_text(obs_report.render(rep))
         for p in trace_logs:
             shutil.copy(p, dest / p.name)
+        (dest / "dashboard.txt").write_text(
+            obs_mon.render_dashboard(final_live)
+        )
+        for p in obs_live.host_metrics(live_a):
+            shutil.copy(p, dest / p.name)
 
     # the sharded epilogue's collective-combined metrics == evaluate()
     # of the reference assignment
@@ -261,6 +382,8 @@ with tempfile.TemporaryDirectory() as _td:
             "after-publish",
             "--die-process",
             "1",
+            "--metrics-dir",
+            str(td / "liveB"),
         ],
         expect_fail=True,
     )
@@ -269,6 +392,26 @@ with tempfile.TemporaryDirectory() as _td:
     out["kill_last_published"] = (
         int(published_b[-1].split("_")[1]) if published_b else 0
     )
+
+    # the killed gang leaves the bus with heartbeats but no done marker:
+    # a monitor attached to its ruins must flip to STALLED (exit 4) —
+    # streams exist, so the run is not dead, but no host is progressing
+    cp = subprocess.run(
+        [
+            sys.executable,
+            str(MONITOR),
+            str(td / "liveB"),
+            "--once",
+            "--stall-after",
+            "0.05",
+            "--dead-after",
+            "1e18",
+        ],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    out["monitor_kill_stalled"] = cp.returncode == obs_mon.EXIT_STALLED
 
     # C: resume B — must replay rounds k+1..end bit-identically
     _, out_c = launch(
@@ -393,6 +536,11 @@ CHECKS = [
     "trace_chrome_valid",
     "report_fields_ok",
     "stats_match",
+    "monitor_hosts_ok",
+    "monitor_rounds_monotone",
+    "monitor_rf_matches_final",
+    "monitor_live_exit",
+    "monitor_kill_stalled",
     "kill_job_failed",
     "kill_resume_round_correct",
     "kill_resume_identical",

@@ -101,6 +101,28 @@ def test_traced_run_artifacts(mh_results):
     assert mh_results["report_fields_ok"]
 
 
+def test_live_monitor_observes_healthy_run(mh_results):
+    """A monitor attached WHILE run A executes sees >=1 heartbeat per
+    host, strictly monotone round progression, every host reaching its
+    done snapshot, and a monitor_run.py --once verdict of exit 0."""
+    assert mh_results["monitor_hosts_ok"]
+    assert mh_results["monitor_rounds_monotone"]
+    assert mh_results["monitor_live_exit"]
+
+
+def test_live_quality_matches_finalized_metrics(mh_results):
+    """The last round-phase live replication factor (reduced from the
+    replicated SPMD state) equals the finalized artifact's metric to
+    1e-6 — the gauges are the real thing, not an approximation."""
+    assert mh_results["monitor_rf_matches_final"]
+
+
+def test_killed_run_flips_monitor_to_stalled(mh_results):
+    """After run B's injected worker death, the bus has heartbeats but
+    no done markers: monitor_run.py --once exits EXIT_STALLED (4)."""
+    assert mh_results["monitor_kill_stalled"]
+
+
 def test_distributed_metrics_match_evaluate(mh_results):
     """Replication factor / edge balance from the sharded epilogue's
     (P,)-sized partials equal evaluate() of the full assignment."""

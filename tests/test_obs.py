@@ -252,6 +252,74 @@ def test_summarize_run_requires_logs(tmp_path):
         report.summarize_run(tmp_path)
 
 
+def test_summarize_run_zero_completed_rounds(tmp_path):
+    """A run killed before its first round completes must still report:
+    null round percentiles, count 0 — never a numpy empty-reduction
+    crash (ISSUE 8 satellite)."""
+    tr = obs.Tracer(path=tmp_path / obs.log_name(0), process=0,
+                    meta={"process_id": 0})
+    with tr.span("ingest", cat="runtime"):
+        pass
+    tr.close()   # no "round" spans at all
+    rep = report.summarize_run(tmp_path)
+    assert rep["rounds"]["count"] == 0
+    for k in ("mean_s", "p50_s", "p90_s", "p99_s", "max_s"):
+        assert rep["rounds"][k] is None
+    text = report.render(rep)           # must not raise either
+    assert "rounds:" not in text        # the empty row is omitted
+    json.dumps(rep)
+
+
+def test_report_cli_zero_rounds_exits_zero(tmp_path):
+    tr = obs.Tracer(path=tmp_path / obs.log_name(0), process=0)
+    tr.close()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "report_run.py"),
+         str(tmp_path)],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "run summary" in proc.stdout
+
+
+def test_merge_skips_metaless_log_with_warning(tmp_path):
+    """A host killed before its first flush leaves a log with no meta
+    anchor — the merge must keep the other hosts and warn, not fail
+    (ISSUE 8 satellite)."""
+    good = tmp_path / obs.log_name(0)
+    good.write_text("\n".join(json.dumps(e) for e in [
+        {"ev": "meta", "v": 1, "pid": 0, "start_unix": 1000.0, "args": {}},
+        {"ev": "span", "pid": 0, "tid": 1, "name": "a", "cat": "t",
+         "ts": 0.0, "dur": 5.0},
+    ]) + "\n")
+    orphan = tmp_path / obs.log_name(1)
+    orphan.write_text(json.dumps(
+        {"ev": "span", "pid": 1, "tid": 1, "name": "b", "cat": "t",
+         "ts": 0.0, "dur": 5.0}) + "\n")
+    with pytest.warns(UserWarning, match="no meta anchor"):
+        metas, events = export.merge_events([good, orphan])
+    assert [m["pid"] for m in metas] == [0]
+    assert [e["name"] for e in events] == ["a"]   # orphan's span skipped
+
+
+def test_summarize_run_includes_live_section(tmp_path):
+    """A run that also published live metrics gets them summarized in
+    the same report (shared schema conventions)."""
+    from repro.obs import live
+
+    _fake_run(tmp_path, hosts=1, rounds=2)
+    bus = live.LiveBus(tmp_path / "live", process=0)
+    bus.publish(phase="round", round=1, edges_remaining=5, rf=1.2)
+    bus.publish(phase="done", round=1, edges_remaining=0, rf=1.3,
+                done=True)
+    bus.close()
+    rep = report.summarize_run(tmp_path)
+    assert rep["live"]["hosts"][0]["done"] is True
+    assert rep["live"]["hosts"][0]["rf"] == 1.3
+    assert rep["live"]["hosts"][0]["snapshots"] == 2
+    assert "live bus" in report.render(rep)
+
+
 def test_legacy_timing_schema():
     tr = obs.Tracer(meta={"process_id": 0, "num_processes": 2,
                           "devices": 8})
