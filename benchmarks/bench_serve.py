@@ -1,0 +1,205 @@
+"""Partition-serving bench: sustained QPS + tail latency under Zipf.
+
+The serving claims the layer makes, measured: (1) the hot-shard LRU
+pays for itself — under a Zipf-skewed query stream the cache-on p99 is
+below the cache-off p99, because head vertices stop re-decoding their
+row shard (the smoke gate asserts this); (2) replication factor IS the
+fan-out cost — every boundary-vertex query fans out to at most its
+replica count, asserted per query against the artifact's replica map;
+(3) a multi-process gang answers bit-identically to the single-process
+service, at HTTP cost.
+
+Rows::
+
+    serve/query_cache_on    µs/query, single process, LRU enabled
+    serve/query_cache_off   µs/query, LRU disabled (decode every time)
+    serve/khop2             µs per 2-hop query (cache on)
+    serve/ppr               µs per personalized-PageRank push query
+    serve/gang_query        µs/query against a 2-process HTTP gang
+
+Derived columns carry p50/p99 and the fan-out/replica-count means.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import types
+
+import numpy as np
+
+from benchmarks.common import record
+
+
+def _zipf_targets(verts: np.ndarray, n_queries: int, seed: int,
+                  a: float = 1.3) -> np.ndarray:
+    """A Zipf-ranked query stream over ``verts`` (rank 1 = hottest)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(a, size=n_queries)
+    return verts[np.minimum(ranks - 1, verts.size - 1)]
+
+
+def _build_artifact(tmp, scale: int, num_partitions: int, seed: int = 0):
+    """RMAT graph → real NE partition → saved artifact (+ the graph)."""
+    from repro.core import NEConfig, partition
+    from repro.graphs.rmat import rmat
+    from repro.runtime.artifact import load_artifact, save_artifact
+
+    g = rmat(scale, 8, seed=seed)
+    res = partition(g, NEConfig(num_partitions=num_partitions, seed=seed))
+    art_dir = os.path.join(tmp, "art")
+    save_artifact(art_dir, res, np.asarray(g.edges), g.num_vertices)
+    return load_artifact(art_dir), art_dir
+
+
+def _fake_artifact(tmp, n: int, m: int, p_num: int, seed: int = 0):
+    """Random-assignment artifact (numpy only — no jax warm-up cost)."""
+    from repro.runtime.artifact import load_artifact, save_artifact
+
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2), dtype=np.int64)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    edge_part = rng.integers(0, p_num, size=edges.shape[0]).astype(np.int32)
+    vparts = np.zeros((n, p_num), bool)
+    for p in range(p_num):
+        e = edges[edge_part == p]
+        vparts[e[:, 0], p] = True
+        vparts[e[:, 1], p] = True
+    res = types.SimpleNamespace(
+        edge_part=edge_part, vparts=vparts,
+        edges_per_part=np.bincount(edge_part, minlength=p_num),
+        rounds=1, leftover=0)
+    art_dir = os.path.join(tmp, "art")
+    save_artifact(art_dir, res, edges, n)
+    return load_artifact(art_dir), art_dir
+
+
+def _run_queries(service, targets) -> np.ndarray:
+    """Issue the stream; returns per-query latencies (µs)."""
+    import time
+
+    lats = np.empty(len(targets))
+    for i, v in enumerate(targets):
+        t0 = time.perf_counter()
+        service.neighbors(int(v))
+        lats[i] = (time.perf_counter() - t0) * 1e6
+    return lats
+
+
+def main(fast: bool = False, smoke: bool = False) -> None:
+    from repro.serve.service import PartitionService
+    from repro.serve.store import ShardStore
+
+    n_queries = 2000 if fast else 20000
+    p_num = 8
+    with tempfile.TemporaryDirectory(prefix="bench_serve_") as tmp:
+        if smoke:
+            art, art_dir = _fake_artifact(tmp, n=1 << 10, m=1 << 13,
+                                          p_num=p_num)
+        else:
+            art, art_dir = _build_artifact(tmp, scale=13 if fast else 16,
+                                           num_partitions=p_num)
+        verts = np.flatnonzero(art.vparts.any(axis=1))
+        targets = _zipf_targets(verts, n_queries, seed=1)
+
+        # --- cache on vs off (the LRU claim) --------------------------
+        stats = {}
+        for label, cache in (("cache_on", 256), ("cache_off", 0)):
+            store = ShardStore(art, rows_per_shard=64, cache_entries=cache)
+            svc = PartitionService(store, batch=0)
+            lats = _run_queries(svc, targets)
+            p50, p99 = np.percentile(lats, [50, 99])
+            stats[label] = (p50, p99, svc.stats())
+            record(f"serve/query_{label}", float(lats.mean()),
+                   f"p50={p50:.1f}us p99={p99:.1f}us "
+                   f"hit={store.cache.hit_ratio():.3f} "
+                   f"decodes={store.decodes}")
+            svc.close()
+        if smoke:
+            # the gate: under Zipf the hot set stays decoded, so the
+            # cached p99 must beat the every-query-decodes p99
+            assert stats["cache_on"][1] < stats["cache_off"][1], (
+                f"cache-on p99 {stats['cache_on'][1]:.1f}us not below "
+                f"cache-off p99 {stats['cache_off'][1]:.1f}us")
+
+        # --- fan-out ≤ replica count (the routing claim) --------------
+        store = ShardStore(art, rows_per_shard=64, cache_entries=256)
+        svc = PartitionService(store, batch=0)
+        reps = art.replica_counts()
+        boundary = art.boundary_vertices()
+        rng = np.random.default_rng(2)
+        probe = rng.choice(boundary, size=min(512, boundary.size),
+                           replace=False)
+        fanouts = np.empty(probe.size, np.int64)
+        for i, v in enumerate(probe):
+            before = svc.served
+            svc.neighbors(int(v))
+            assert svc.served == before + 1
+            fanouts[i] = svc._fanout[-1]
+            # replication factor IS the fan-out cost — never exceeded
+            assert fanouts[i] <= reps[v], (
+                f"vertex {v}: fan-out {fanouts[i]} > replica "
+                f"count {reps[v]}")
+        record("serve/fanout", float(fanouts.mean()),
+               f"mean_replicas={reps[probe].mean():.2f} "
+               f"max_fanout={int(fanouts.max())} rf={reps.mean():.3f}")
+
+        # --- traversal queries ----------------------------------------
+        import time
+
+        heads = targets[:64 if fast else 256]
+        t0 = time.perf_counter()
+        for v in heads:
+            svc.k_hop(int(v), 2)
+        record("serve/khop2",
+               (time.perf_counter() - t0) / len(heads) * 1e6,
+               f"queries={len(heads)}")
+        t0 = time.perf_counter()
+        for v in heads[:32]:
+            svc.ppr(int(v), eps=1e-3)
+        record("serve/ppr", (time.perf_counter() - t0) / 32 * 1e6,
+               "eps=1e-3")
+        svc.close()
+
+        # --- multi-process gang ---------------------------------------
+        from repro.serve.gang import GangClient, launch_serving_gang
+
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env = {"PYTHONPATH": src + os.pathsep
+               + os.environ.get("PYTHONPATH", "")}
+        gang = launch_serving_gang(art_dir, 2, cache=256, batch=0,
+                                   extra_env=env)
+        try:
+            cli = GangClient(art, gang.ports)
+            gang_targets = targets[:500 if fast else 2000]
+            t0 = time.perf_counter()
+            for v in gang_targets:
+                cli.neighbors(int(v))
+            us = (time.perf_counter() - t0) / len(gang_targets) * 1e6
+            cst = cli.stats()
+            record("serve/gang_query", us,
+                   f"groups=2 p99={cst['p99_ms'] * 1e3:.0f}us "
+                   f"fanout={cst['fanout_mean']:.2f}")
+            if smoke:
+                # bit-consistency: gang == single process on a sample
+                store = ShardStore(art, cache_entries=64)
+                ref = PartitionService(store, batch=0)
+                for v in gang_targets[:50]:
+                    np.testing.assert_array_equal(
+                        cli.neighbors(int(v)), ref.neighbors(int(v)))
+                ref.close()
+        finally:
+            gang.close()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    from benchmarks.common import header
+
+    header()
+    main(fast=args.fast or args.smoke, smoke=args.smoke)

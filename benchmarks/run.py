@@ -27,7 +27,7 @@ REGRESSION_PCT = 25.0  # --compare gate: slower than prior by more → exit 3
 
 
 SMOKE_SUITES = ("theory", "memory", "spmd", "runtime",
-                "kernels")  # tiny CI drift gate
+                "kernels", "serve")  # tiny CI drift gate
 
 
 def compare_rows(rows, prior_path: str) -> tuple[list, list]:
@@ -111,7 +111,8 @@ def main() -> None:
     from benchmarks import (bench_apps, bench_elapsed, bench_kernels,
                             bench_lambda_sweep, bench_memory, bench_quality,
                             bench_roads, bench_runtime, bench_scaling,
-                            bench_sequential, bench_spmd, bench_theory)
+                            bench_sequential, bench_serve, bench_spmd,
+                            bench_theory)
     from benchmarks.common import ROWS, header
     from repro.obs import trace as obs
 
@@ -140,6 +141,8 @@ def main() -> None:
         "roads": lambda: bench_roads.main(fast=args.fast),
         "kernels": lambda: bench_kernels.main(fast=args.fast,
                                               smoke=args.smoke),
+        "serve": lambda: bench_serve.main(fast=args.fast,
+                                          smoke=args.smoke),
     }
     if args.only is not None and args.only not in suites:
         print(f"unknown suite {args.only!r}; known: {sorted(suites)}",

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm.transformer import LMConfig, init_params
-from repro.serve.server import ServeConfig, serve_batch
+from repro.models.lm.serve import ServeConfig, serve_batch
 
 
 def main():

@@ -1,0 +1,96 @@
+"""Docs lint: intra-repo markdown links resolve, design docs are mapped.
+
+Two checks, run by the CI lint job (and importable by tests):
+
+1. every relative link target in the repo's markdown files exists
+   (absolute URLs and ``#fragment``-only links are skipped; a
+   ``path#fragment`` link checks just the path);
+2. every ``docs/DESIGN-*.md`` is referenced from
+   ``docs/ARCHITECTURE.md`` — the architecture map must not silently
+   fall behind the design docs.
+
+Exit 0 clean, 1 with one ``file: problem`` line per finding.  Stdlib
+only.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+import urllib.parse
+
+# [text](target) — target up to the first unescaped ')'; images too
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DOC_GLOBS = ("*.md", "docs/*.md")
+
+
+def markdown_files(root: str) -> list[str]:
+    out: list[str] = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(glob.glob(os.path.join(root, pat))))
+    return out
+
+
+def check_links(root: str, paths: list[str]) -> list[str]:
+    problems = []
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks are not prose — links inside are examples
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if urllib.parse.urlparse(target).scheme in ("http", "https",
+                                                        "mailto"):
+                continue
+            if target.startswith("#"):
+                continue                      # same-file fragment
+            rel = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                problems.append(
+                    f"{os.path.relpath(path, root)}: broken link "
+                    f"-> {target}")
+    return problems
+
+
+def check_design_docs_mapped(root: str) -> list[str]:
+    arch = os.path.join(root, "docs", "ARCHITECTURE.md")
+    if not os.path.exists(arch):
+        return ["docs/ARCHITECTURE.md: missing (the system map is "
+                "required)"]
+    with open(arch, encoding="utf-8") as f:
+        text = f.read()
+    problems = []
+    for path in sorted(glob.glob(os.path.join(root, "docs",
+                                              "DESIGN-*.md"))):
+        name = os.path.basename(path)
+        if name not in text:
+            problems.append(f"docs/ARCHITECTURE.md: does not reference "
+                            f"{name}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), help="repo root (default: inferred)")
+    args = ap.parse_args(argv)
+    paths = markdown_files(args.root)
+    problems = check_links(args.root, paths)
+    problems += check_design_docs_mapped(args.root)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} docs problem(s)", file=sys.stderr)
+        return 1
+    print(f"docs OK: {len(paths)} markdown files, all intra-repo links "
+          f"resolve, all DESIGN docs mapped")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""Batched LM serving loop: continuous KV-cache decode.
+
+(Moved from ``repro.serve.server`` — ``repro.serve`` is the graph
+partition-serving layer; this module is the language-model decode loop
+used by ``examples/serve_lm.py``.)
+
+Aligned-batch serving (all rows share the cache position — the layout the
+decode_32k/long_500k cells lower): prefill a batch of prompts, then decode
+greedily/with temperature until max tokens.  The KV cache is donated
+through the jitted step, so memory stays constant across steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import transformer as tf
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    cache_len: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+
+
+def make_decode_step(cfg: tf.LMConfig):
+    @partial(jax.jit, donate_argnums=(2, 3))
+    def step(params, token, k_cache, v_cache, cache_pos, key, temp):
+        logits, (k2, v2), new_pos = tf.decode(
+            params, token, (k_cache, v_cache), cache_pos, cfg)
+        lg = logits[:, -1, :].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1)
+        sampled = jax.random.categorical(key, lg / jnp.maximum(temp, 1e-6))
+        nxt = jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+        return nxt[:, None], k2, v2, new_pos
+
+    return step
+
+
+def serve_batch(params, prompts: np.ndarray, cfg: tf.LMConfig,
+                scfg: ServeConfig) -> np.ndarray:
+    """prompts: (B, S0) int32 (aligned).  Returns (B, S0 + new)."""
+    b, s0 = prompts.shape
+    smax = scfg.cache_len
+    assert s0 + scfg.max_new_tokens <= smax
+    k_cache = jnp.zeros((cfg.n_layers, b, smax, cfg.n_kv_heads, cfg.hd),
+                        cfg.dtype)
+    v_cache = jnp.zeros_like(k_cache)
+    # prefill token-by-token via the decode path (cache build); a fused
+    # prefill_step exists in launch/steps.py for the prefill cells.
+    step = make_decode_step(cfg)
+    pos = jnp.int32(0)
+    key = jax.random.PRNGKey(scfg.seed)
+    tok = jnp.asarray(prompts[:, :1])
+    for i in range(s0 - 1):
+        _, k_cache, v_cache, pos = step(
+            params, jnp.asarray(prompts[:, i:i + 1]), k_cache, v_cache,
+            pos, key, jnp.float32(0.0))
+    out = [np.asarray(prompts)]
+    tok = jnp.asarray(prompts[:, -1:])
+    for i in range(scfg.max_new_tokens):
+        key, sub = jax.random.split(key)
+        tok, k_cache, v_cache, pos = step(
+            params, tok, k_cache, v_cache, pos, sub,
+            jnp.float32(scfg.temperature))
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)

@@ -28,18 +28,23 @@ already has):
     ``\\n``-terminated lines (:func:`tail_snapshots`) and a torn tail
     is simply "the snapshot that never happened".
 
-Snapshot schema (v1) — every ``hb`` line carries exactly these fields,
+Snapshot schema (v2) — every ``hb`` line carries exactly these fields,
 ``None`` where a phase has nothing to report:
 
 ``ev, v, pid, seq, t_unix, phase, round, edges_remaining,
-sync_payload_bytes, rss_kb, rss_peak_kb, rf, eb, vb, boundary, done``
+sync_payload_bytes, rss_kb, rss_peak_kb, rf, eb, vb, boundary, done,
+qps, p99_ms, cache_hit, fanout``
 
 ``t_unix`` doubles as the heartbeat: the monitor's stall detector is
 "now - last t_unix".  ``seq`` increments per snapshot so dropped or
 reordered reads are detectable.  ``rf``/``eb``/``vb``/``boundary`` are
 the live quality gauges; at the fixed point they equal the finalized
 artifact's metrics exactly (no leftovers remain to clean up), which the
-multihost integration checks assert to 1e-6.
+multihost integration checks assert to 1e-6.  The v2 additions
+(``qps``/``p99_ms``/``cache_hit``/``fanout``) are the serving gauges:
+a ``repro.serve.server`` host heartbeats them under ``phase:
+"serve"``, and the monitor exposes them as ``repro_serve_*``.  v1
+streams remain readable — readers treat absent fields as ``None``.
 
 Like the tracer, the bus is near-zero cost when disabled: the
 module-level :func:`publish` front door is one global load plus an
@@ -53,7 +58,7 @@ import time
 
 from repro.obs import rss
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: the conventional bus subdirectory of a run's store/output directory
 BUS_DIRNAME = "live"
@@ -61,7 +66,8 @@ BUS_DIRNAME = "live"
 #: the fixed ``hb`` payload schema — publish() rejects anything else
 SNAPSHOT_FIELDS = ("phase", "round", "edges_remaining",
                    "sync_payload_bytes", "rss_kb", "rss_peak_kb",
-                   "rf", "eb", "vb", "boundary", "done")
+                   "rf", "eb", "vb", "boundary", "done",
+                   "qps", "p99_ms", "cache_hit", "fanout")
 
 
 def metrics_name(process: int) -> str:

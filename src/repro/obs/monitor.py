@@ -221,6 +221,12 @@ class BusMonitor:
                 "vb": last.get("vb"),
                 "boundary": last.get("boundary"),
                 "done": t.done,
+                # serving gauges (schema v2, phase "serve"); None on
+                # partitioning runs and v1 streams
+                "qps": last.get("qps"),
+                "p99_ms": last.get("p99_ms"),
+                "cache_hit": last.get("cache_hit"),
+                "fanout": last.get("fanout"),
             }
         if not hosts:
             overall = "dead"
@@ -421,6 +427,20 @@ def render_prometheus(status: dict) -> str:
                 if h[field] is not None]
         if vals:
             emit(name, help_, [f"{name} {vals[0]}"])
+    # serving-gang gauges (bus schema v2, phase "serve") — per host,
+    # since each gang member serves a different partition group
+    for name, field, help_ in (
+            ("repro_serve_qps", "qps", "Queries/s served by the host"),
+            ("repro_serve_p99_ms", "p99_ms", "p99 query latency"),
+            ("repro_serve_cache_hit_ratio", "cache_hit",
+             "Decoded-shard LRU hit ratio"),
+            ("repro_serve_fanout_mean", "fanout",
+             "Mean partitions touched per query (≤ replica count)")):
+        samples = [f'{name}{{host="{p}"}} {h[field]}'
+                   for p, h in sorted(hosts.items())
+                   if h[field] is not None]
+        if samples:
+            emit(name, help_, samples)
     emit("repro_run_status",
          "0 healthy / 1 done / 2 stalled / 3 dead",
          [f"repro_run_status {_STATUS_CODE[status['overall']]}"])

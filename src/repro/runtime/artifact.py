@@ -422,6 +422,26 @@ class PartitionArtifact:
                 self.num_vertices, self.num_partitions).astype(bool)
         return self._cache["vparts"]
 
+    def replica_counts(self) -> np.ndarray:
+        """(N,) int32 per-vertex replica count — the paper's replication
+        cost, and the serving layer's per-query fan-out upper bound
+        (``repro.serve`` routes a vertex query only to partitions in its
+        replica set, so fan-out ≤ this by construction)."""
+        return self.vparts.sum(axis=1).astype(np.int32)
+
+    def partitions_of(self, v: int) -> np.ndarray:
+        """The partitions holding a replica of vertex ``v`` — the
+        serving fan-out set.  Union of ``neighbors(p, v)`` over exactly
+        these partitions is ``v``'s full adjacency (vertex-cut
+        invariant: ``v ∈ p`` iff ``p`` owns an edge incident to
+        ``v``)."""
+        return np.flatnonzero(self.vparts[int(v)])
+
+    def boundary_vertices(self) -> np.ndarray:
+        """Vertices replicated into >1 partition (the cut set) —
+        exactly the queries that fan out across a serving gang."""
+        return np.flatnonzero(self.vparts.sum(axis=1) > 1)
+
     def result(self):
         """Reconstruct the :class:`PartitionResult` (bit-identical)."""
         # lazy: keep the artifact store importable without jax

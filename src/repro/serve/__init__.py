@@ -1,0 +1,54 @@
+"""repro.serve — partition-serving layer over durable artifacts.
+
+The online consumer of ``repro.runtime.artifact``: load a partition
+artifact into a sharded graph/feature store (``store``), answer
+neighbor / k-hop / feature / personalized-PageRank queries through a
+replica-map-routed service (``service``), batch concurrent requests
+until deadline-or-batch-size (``batch``), keep Zipf-head adjacency
+decoded in an LRU (``cache``), and scale past one process with an HTTP
+gang — one server per partition group, first death kills the gang
+(``server``, ``gang``).  See docs/DESIGN-serve.md.
+
+Re-exports resolve lazily (PEP 562).  Nothing here imports jax: a
+serving host starts in milliseconds and runs wherever the monitor
+runs.  The LM decode loop that used to live at ``repro.serve.server``
+is now ``repro.models.lm.serve``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "RequestBatcher": "repro.serve.batch",
+    "default_max_batch": "repro.serve.batch",
+    "default_max_delay_s": "repro.serve.batch",
+    "LRUCache": "repro.serve.cache",
+    "GangClient": "repro.serve.gang",
+    "ServingGang": "repro.serve.gang",
+    "launch_serving_gang": "repro.serve.gang",
+    "ServeServer": "repro.serve.server",
+    "group_partitions": "repro.serve.server",
+    "make_server": "repro.serve.server",
+    "FanoutViolation": "repro.serve.service",
+    "PartitionService": "repro.serve.service",
+    "k_hop": "repro.serve.service",
+    "ppr": "repro.serve.service",
+    "render_serve_prometheus": "repro.serve.service",
+    "ShardStore": "repro.serve.store",
+    "default_cache_entries": "repro.serve.store",
+    "vertex_features": "repro.serve.store",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        value = getattr(importlib.import_module(_EXPORTS[name]), name)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,52 @@
+"""Docs lint checks: the repo's markdown passes, and the checker
+actually detects breakage (a linter that can't fail is not a gate)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(ROOT, "scripts", "check_docs.py")
+
+sys.path.insert(0, os.path.join(ROOT, "scripts"))
+check_docs = __import__("check_docs")
+
+
+def test_repo_docs_clean():
+    out = subprocess.run([sys.executable, SCRIPT], capture_output=True,
+                         text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_broken_link_detected(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "see [gone](missing.md) and [ok](ARCHITECTURE.md)\n")
+    problems = check_docs.check_links(
+        str(tmp_path), check_docs.markdown_files(str(tmp_path)))
+    assert len(problems) == 1 and "missing.md" in problems[0]
+
+
+def test_skips_external_and_fenced(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "[x](https://example.com) [y](#frag)\n"
+        "```\n[fake](inside/code.md)\n```\n")
+    problems = check_docs.check_links(
+        str(tmp_path), check_docs.markdown_files(str(tmp_path)))
+    assert problems == []
+
+
+def test_unmapped_design_doc_detected(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "links [a](DESIGN-a.md)\n")
+    (tmp_path / "docs" / "DESIGN-a.md").write_text("a\n")
+    (tmp_path / "docs" / "DESIGN-b.md").write_text("b\n")
+    problems = check_docs.check_design_docs_mapped(str(tmp_path))
+    assert problems == ["docs/ARCHITECTURE.md: does not reference "
+                        "DESIGN-b.md"]
+
+
+def test_missing_architecture_detected(tmp_path):
+    (tmp_path / "docs").mkdir()
+    problems = check_docs.check_design_docs_mapped(str(tmp_path))
+    assert len(problems) == 1 and "missing" in problems[0]

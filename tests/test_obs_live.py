@@ -45,7 +45,8 @@ def test_publish_schema_fixed(tmp_path):
     # every schema field present, even unreported ones (as null)
     for k in live.SNAPSHOT_FIELDS:
         assert k in ev
-    assert ev["seq"] == 1 and ev["pid"] == 0 and ev["v"] == 1
+    assert ev["seq"] == 1 and ev["pid"] == 0
+    assert ev["v"] == live.SCHEMA_VERSION
     assert ev["rss_kb"] > 0          # auto-filled from obs.rss
     assert ev["done"] is False
     snaps = live.load_snapshots(b.path)

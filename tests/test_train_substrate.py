@@ -247,7 +247,7 @@ def test_neighbor_sampler():
 
 def test_serving_loop():
     from repro.models.lm.transformer import LMConfig, init_params
-    from repro.serve.server import ServeConfig, serve_batch
+    from repro.models.lm.serve import ServeConfig, serve_batch
 
     cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
                    n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
