@@ -24,6 +24,35 @@ def record(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def fmt_metrics(**metrics) -> str:
+    """Pack named numeric metrics into the canonical ``k=v;k=v`` derived
+    string — the one packing :func:`parse_metrics` round-trips, so a row
+    recorded through this is comparable field-by-field by the driver's
+    quality gate (not just by its timing column)."""
+    return ";".join(f"{k}={float(v):.6g}" for k, v in metrics.items())
+
+
+def parse_metrics(derived: str) -> dict[str, float]:
+    """First-class metric fields from a row's derived string.
+
+    Parses every ``k=v`` token whose value is a float and skips the rest,
+    so the free-text notes in historical rows (``dne_best_in=3/4_cells``,
+    bare flags) stay readable — old CSV/JSON rows parse to whatever
+    numeric fields they had, new rows round-trip :func:`fmt_metrics`
+    exactly.
+    """
+    out: dict[str, float] = {}
+    for tok in (derived or "").split(";"):
+        key, sep, val = tok.partition("=")
+        if not sep:
+            continue
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall time (seconds)."""
     for _ in range(warmup):

@@ -25,45 +25,85 @@ import traceback
 
 REGRESSION_PCT = 25.0  # --compare gate: slower than prior by more → exit 3
 
+# quality fields compared per-row under --compare (higher = worse for all
+# three); regressions past the threshold exit 4 under --quality-gate —
+# BLOCKING in CI, unlike the advisory timing exit 3: partition quality is
+# deterministic, so any drift is a real algorithm change, not runner noise
+QUALITY_METRICS = ("rf", "eb", "vb")
+QUALITY_REGRESSION_PCT = 2.0
+
 
 SMOKE_SUITES = ("theory", "memory", "spmd", "runtime",
                 "kernels", "serve")  # tiny CI drift gate
+# the quality matrix is NOT in SMOKE_SUITES: its streaming-baseline scans
+# are too slow for the smoke gate, so CI gives it a dedicated job
 
 
-def compare_rows(rows, prior_path: str) -> tuple[list, list]:
+def compare_rows(rows, prior_path: str) -> tuple[list, list, list, list]:
     """Print per-row deltas vs a committed BENCH_*.json.
 
-    Returns ``(deltas, regressions)``: every comparable-or-new row as
-    ``(name, old_us, new_us, pct)`` (``old_us``/``pct`` are None for new
-    rows), and the subset that regressed by more than
-    :data:`REGRESSION_PCT` percent."""
+    Returns ``(deltas, regressions, qdeltas, qregressions)``: every
+    comparable-or-new row as ``(name, old_us, new_us, pct)``
+    (``old_us``/``pct`` are None for new rows) with the subset that
+    slowed by more than :data:`REGRESSION_PCT` percent, plus the same
+    for the first-class quality fields — every :data:`QUALITY_METRICS`
+    key shared by a row and its prior as
+    ``(name, metric, old, new, pct)``, with the subset that *worsened*
+    (all three are higher-is-worse) by more than
+    :data:`QUALITY_REGRESSION_PCT` percent.  Prior rows may carry their
+    metrics as an explicit ``"metrics"`` dict (new format) or packed in
+    the ``"derived"`` string (old format) — both parse.
+    """
     import json
 
+    from benchmarks.common import parse_metrics
+
     with open(prior_path) as f:
-        prior = {r["name"]: float(r["us_per_call"]) for r in json.load(f)}
+        prior_rows = json.load(f)
+    prior = {r["name"]: float(r["us_per_call"]) for r in prior_rows}
+    prior_q = {r["name"]: (r.get("metrics")
+                           or parse_metrics(r.get("derived", "")))
+               for r in prior_rows}
     deltas, regressions = [], []
+    qdeltas, qregressions = [], []
     print(f"\n--- compare vs {prior_path} ---")
-    for name, us, _derived in rows:
+    for name, us, derived in rows:
         old = prior.get(name)
         if old is None:
             print(f"{name}: (new) {us:.1f}us")
             deltas.append((name, None, us, None))
             continue
-        if old <= 0:
-            continue
-        pct = (us - old) / old * 100.0
-        flag = "  REGRESSION" if pct > REGRESSION_PCT else ""
-        print(f"{name}: {old:.1f}us -> {us:.1f}us ({pct:+.1f}%){flag}")
-        deltas.append((name, old, us, pct))
-        if pct > REGRESSION_PCT:
-            regressions.append((name, old, us, pct))
-    return deltas, regressions
+        if old > 0:
+            pct = (us - old) / old * 100.0
+            flag = "  REGRESSION" if pct > REGRESSION_PCT else ""
+            print(f"{name}: {old:.1f}us -> {us:.1f}us ({pct:+.1f}%){flag}")
+            deltas.append((name, old, us, pct))
+            if pct > REGRESSION_PCT:
+                regressions.append((name, old, us, pct))
+        mine = parse_metrics(derived)
+        theirs = prior_q.get(name) or {}
+        for metric in QUALITY_METRICS:
+            if metric not in mine or metric not in theirs:
+                continue
+            o, v = float(theirs[metric]), float(mine[metric])
+            if o <= 0:
+                continue
+            qpct = (v - o) / o * 100.0
+            worse = qpct > QUALITY_REGRESSION_PCT
+            qdeltas.append((name, metric, o, v, qpct))
+            if worse:
+                print(f"{name}: {metric} {o:.4f} -> {v:.4f} "
+                      f"({qpct:+.2f}%)  QUALITY REGRESSION")
+                qregressions.append((name, metric, o, v, qpct))
+    return deltas, regressions, qdeltas, qregressions
 
 
-def write_compare_md(path: str, deltas: list, prior_path: str) -> None:
+def write_compare_md(path: str, deltas: list, prior_path: str,
+                     qdeltas: list | None = None) -> None:
     """Append the compare deltas as a GitHub-flavored markdown table —
     the ``$GITHUB_STEP_SUMMARY`` payload of the CI bench job (append, not
-    truncate: the summary file is shared by every step of the job)."""
+    truncate: the summary file is shared by every step of the job).
+    Quality deltas (rf/eb/vb) get their own table when present."""
     lines = [
         f"### Benchmark deltas vs `{os.path.basename(prior_path)}`",
         "",
@@ -78,6 +118,19 @@ def write_compare_md(path: str, deltas: list, prior_path: str) -> None:
             lines.append(
                 f"| `{name}` | {old:.1f} | {us:.1f} | {pct:+.1f}%{flag} |"
             )
+    if qdeltas:
+        lines += [
+            "",
+            f"### Quality deltas vs `{os.path.basename(prior_path)}` "
+            f"(gate: >{QUALITY_REGRESSION_PCT:.0f}% worse blocks)",
+            "",
+            "| row | metric | prior | now | delta |",
+            "| --- | --- | ---: | ---: | ---: |",
+        ]
+        for name, metric, old, new, pct in qdeltas:
+            flag = " ❌" if pct > QUALITY_REGRESSION_PCT else ""
+            lines.append(f"| `{name}` | {metric} | {old:.4f} | {new:.4f} "
+                         f"| {pct:+.2f}%{flag} |")
     with open(path, "a") as f:
         f.write("\n".join(lines) + "\n\n")
 
@@ -104,6 +157,11 @@ def main() -> None:
                     help="append the --compare deltas as a markdown table "
                          "to this file (CI points it at "
                          "$GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--quality-gate", action="store_true",
+                    help="exit 4 (blocking) when --compare finds any "
+                         "rf/eb/vb field worsened by more than "
+                         f"{QUALITY_REGRESSION_PCT:.0f}%% — the CI "
+                         "quality job's gate, unlike the advisory exit 3")
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
@@ -175,9 +233,14 @@ def main() -> None:
     if args.json:
         import json
 
+        from benchmarks.common import parse_metrics
+
         with open(args.json, "w") as f:
             json.dump([{"name": name, "us_per_call": round(us, 1),
-                        "derived": derived}
+                        "derived": derived,
+                        # first-class parsed fields, so baseline readers
+                        # (and the quality gate) never re-parse free text
+                        "metrics": parse_metrics(derived)}
                        for name, us, derived in ROWS], f, indent=2)
             f.write("\n")
     if args.trace:
@@ -186,11 +249,12 @@ def main() -> None:
         obs.disable()  # close + flush the bench tracer's JSONL log
         export.write_chrome_trace(args.trace, [bench_log])
         print(f"trace written to {args.trace}", file=sys.stderr)
-    regressions = []
+    regressions, qregressions = [], []
     if args.compare:
-        deltas, regressions = compare_rows(ROWS, args.compare)
+        deltas, regressions, qdeltas, qregressions = \
+            compare_rows(ROWS, args.compare)
         if args.compare_md:
-            write_compare_md(args.compare_md, deltas, args.compare)
+            write_compare_md(args.compare_md, deltas, args.compare, qdeltas)
     if not ran:
         print("no suites selected — selection bug, not success",
               file=sys.stderr)
@@ -198,6 +262,11 @@ def main() -> None:
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)
+    if args.quality_gate and qregressions:
+        print(f"{len(qregressions)} quality field(s) worsened "
+              f">{QUALITY_REGRESSION_PCT:.0f}% vs {args.compare} "
+              "(BLOCKING)", file=sys.stderr)
+        raise SystemExit(4)
     if regressions:
         print(f"{len(regressions)} row(s) regressed >{REGRESSION_PCT:.0f}% "
               f"vs {args.compare} (advisory)", file=sys.stderr)

@@ -45,6 +45,21 @@ def build_parser() -> argparse.ArgumentParser:
         help="canonical EdgeFile to partition",
     )
     job.add_argument("--partitions", type=int, required=True)
+    job.add_argument(
+        "--partitioner",
+        choices=["ne", "hybrid"],
+        default="ne",
+        help="ne: the paper's Distributed NE (SPMD, multi-process); "
+        "hybrid: HEP-style NE-below-threshold + 2D-hash tail under "
+        "--budget-frac (single-controller: --num-processes must be 1)",
+    )
+    job.add_argument(
+        "--budget-frac",
+        type=float,
+        default=0.5,
+        help="hybrid memory budget tau: the NE phase's CSR may hold at "
+        "most tau * 2M adjacency slots (1.0 degenerates to pure NE)",
+    )
     job.add_argument("--alpha", type=float, default=1.1)
     job.add_argument("--lam", type=float, default=0.1)
     job.add_argument("--k-sel", type=int, default=256)
@@ -136,7 +151,14 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: list[str] | None = None) -> int:
-    ns = build_parser().parse_args(argv)
+    parser = build_parser()
+    ns = parser.parse_args(argv)
+    if ns.partitioner == "hybrid" and ns.num_processes != 1:
+        parser.error(
+            "--partitioner hybrid is single-controller: the expansion "
+            "phase runs over the low subgraph on one process "
+            "(use --num-processes 1, or --partitioner ne for SPMD)"
+        )
     if ns.worker:
         from repro.runtime.multihost import worker_main
 

@@ -15,6 +15,10 @@ _EXPORTS = {
     "from_edges": "repro.core.graph",
     "NEConfig": "repro.core.partitioner",
     "PartitionResult": "repro.core.partitioner",
+    "HybridConfig": "repro.core.hybrid",
+    "degree_threshold": "repro.core.hybrid",
+    "hybrid_split": "repro.core.hybrid",
+    "partition_hybrid": "repro.core.hybrid",
     "alpha_limit": "repro.core.epilogue",
     "cleanup_leftovers": "repro.core.epilogue",
     "leftover_plan": "repro.core.epilogue",

@@ -68,7 +68,13 @@ def _hdrf_scan(edges: Array, p: int, n: int, lam_balance: float = 1.0):
         g_v = jnp.where(in_v, 1.0 + (1.0 - theta_v), 0.0)
         maxs = sizes.max()
         mins = sizes.min()
-        c_bal = (maxs - sizes) / (1e-3 + maxs - mins)
+        # exact normalized balance term, constant 1.0 when the stream is
+        # perfectly balanced (maxs == mins) — the epsilon-damped form
+        # degenerated to an all-zero term there and under-weighted the
+        # balance score by eps/spread everywhere else
+        spread = (maxs - mins).astype(jnp.float32)
+        c_bal = jnp.where(spread > 0.0,
+                          (maxs - sizes) / jnp.maximum(spread, 1.0), 1.0)
         score = g_u + g_v + lam_balance * c_bal
         tgt = jnp.argmax(score).astype(jnp.int32)
         vpart = vpart.at[u, tgt].set(True).at[v, tgt].set(True)
@@ -105,6 +111,11 @@ def _oblivious_scan(edges: Array, p: int, n: int, limit: int):
         # rule 3: least loaded overall — least-loaded tie-break throughout.
         cand = jnp.where(both.any(), both, jnp.where(either.any(), either,
                                                      room))
+        # every partition at capacity leaves cand all-False and the score
+        # all -inf, whose argmax silently dumped the edge on partition 0;
+        # overflow to the least-loaded partition instead so the forced
+        # excess still spreads evenly
+        cand = jnp.where(room.any(), cand, jnp.ones_like(cand))
         score = jnp.where(cand, -sizes.astype(jnp.float32), -jnp.inf)
         tgt = jnp.argmax(score).astype(jnp.int32)
         vpart = vpart.at[u, tgt].set(True).at[v, tgt].set(True)

@@ -16,6 +16,7 @@ from repro.io.csr import (CSRArrays, canonicalize_host, csr_from_canonical,
                           grid_assign_host)
 from repro.io.edgefile import (FLAG_CANONICAL, EdgeFile, EdgeFileWriter,
                                write_edgefile)
+from repro.io.ingest import dump_text, ingest_text, iter_text_edges
 from repro.io.spill import spill_canonical_rmat, spill_rmat
 from repro.io.stream import (canonicalize_stream, csr_arrays_from_edgefile,
                              csr_slot_stream, degree_indptr,
@@ -26,8 +27,9 @@ __all__ = [
     "CSRArrays", "EdgeFile", "EdgeFileWriter", "FLAG_CANONICAL",
     "PackedCSR", "PackedCSRWriter", "canonicalize_host",
     "canonicalize_stream", "csr_arrays_from_edgefile", "csr_from_canonical",
-    "csr_slot_stream", "degree_indptr", "graph_from_edgefile",
-    "grid_assign_host", "infer_num_vertices", "pack_csr",
+    "csr_slot_stream", "degree_indptr", "dump_text", "graph_from_edgefile",
+    "grid_assign_host", "infer_num_vertices", "ingest_text",
+    "iter_text_edges", "pack_csr",
     "require_canonical", "shard_edges_stream", "spill_canonical_rmat",
     "spill_rmat",
     "varint_decode", "varint_encode", "write_edgefile", "zigzag_decode",

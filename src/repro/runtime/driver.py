@@ -75,9 +75,15 @@ class PartitionDriver:
 
     ``mode="spmd"`` (default) drives the shard_map partitioner over
     ``num_devices``; ``mode="single"`` drives the single-controller
-    fixed point.  One :meth:`step` == one paper round; :meth:`run` loops
-    to completion with periodic snapshots; :meth:`resume` rebuilds a
-    driver from the latest (or a chosen) snapshot.
+    fixed point; ``mode="hybrid"`` drives the HEP-style hybrid
+    (``cfg`` must then be a :class:`repro.core.hybrid.HybridConfig`) —
+    the tail is grid-hashed at ingest, rounds step the *same*
+    ``ne_round_step`` over the low subgraph from the seeded state, and
+    finalize stitches through ``hybrid_finalize``; snapshots/resume
+    inherit round-for-round (the seeded state is just an NEState).  One
+    :meth:`step` == one paper round; :meth:`run` loops to completion
+    with periodic snapshots; :meth:`resume` rebuilds a driver from the
+    latest (or a chosen) snapshot.
     """
 
     def __init__(self, source, cfg: NEConfig, num_devices: int | None = None,
@@ -85,7 +91,7 @@ class PartitionDriver:
                  snapshot_every: int = 0, keep: int = 3,
                  num_hosts: int | None = None, ingest_processes: bool = False,
                  exchange_dir: str | os.PathLike | None = None):
-        if mode not in ("spmd", "single"):
+        if mode not in ("spmd", "single", "hybrid"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
         self.source = source
@@ -100,12 +106,31 @@ class PartitionDriver:
         # round-k integration checks); never set in production runs
         self.snapshot_fault_hook = None
 
-        if mode == "single" and self._nprocs > 1:
-            raise ValueError("mode='single' is single-controller by "
+        if mode in ("single", "hybrid") and self._nprocs > 1:
+            raise ValueError(f"mode={mode!r} is single-controller by "
                              "definition — multi-process runs drive the "
                              "SPMD partitioner (mode='spmd')")
         with obs.span("ingest", cat="runtime", mode=mode):
-            if mode == "single":
+            if mode == "hybrid":
+                from repro.core.hybrid import (HybridConfig,
+                                               hybrid_init_state,
+                                               hybrid_split)
+
+                if not isinstance(cfg, HybridConfig):
+                    raise TypeError("mode='hybrid' takes a HybridConfig, "
+                                    f"got {type(cfg).__name__}")
+                self._graph_fp = graph_fingerprint(source)
+                split = hybrid_split(source, cfg)
+                self.cfg = cfg.clamped(split.num_vertices)
+                self._necfg = self.cfg.ne_config()
+                self._split = split
+                self._graph = split.low
+                self.n, self.m = split.num_vertices, split.num_edges
+                self._edges = None      # materialized lazily by save_artifact
+                self.limit = alpha_limit(self.cfg.alpha, self.m,
+                                         self.cfg.num_partitions)
+                self.state = hybrid_init_state(split, self._necfg)
+            elif mode == "single":
                 g = source if isinstance(source, EdgeFile) \
                     else as_graph(source)
                 self._graph_fp = graph_fingerprint(g)
@@ -138,7 +163,7 @@ class PartitionDriver:
 
         # per-round SyncVertexAllocations traffic (per device) — a pure
         # function of the config, recorded as a cumulative trace counter
-        self._sync_bytes = (0 if mode == "single" else
+        self._sync_bytes = (0 if mode in ("single", "hybrid") else
                             round_sync_payload_bytes(self.cfg, self.n,
                                                      self.num_devices))
         self._sync_total = 0
@@ -241,7 +266,8 @@ class PartitionDriver:
         if self._done is None:
             if self.m == 0:
                 self._done = True
-            elif self.mode == "single":
+            elif self.mode in ("single", "hybrid"):
+                # HybridConfig carries max_rounds, so ne_done reads either
                 self._done = ne_done(self.state, self.cfg)
             else:
                 self._done = spmd_done(self.state, self.cfg)
@@ -262,9 +288,10 @@ class PartitionDriver:
         # span): per-round cost as a long run pays it, matching the old
         # hand-timed round_secs the multihost_snap bench row diffs
         with sp:
-            if self.mode == "single":
+            if self.mode in ("single", "hybrid"):
+                cfg = self.cfg if self.mode == "single" else self._necfg
                 self.state = jax.block_until_ready(ne_round_step(
-                    self._graph, self.cfg, self.limit, self.state))
+                    self._graph, cfg, self.limit, self.state))
             else:
                 self.state = jax.block_until_ready(spmd_round_step(
                     self.cfg, self.limit, self.n, self.mesh, self._u_sh,
@@ -321,6 +348,13 @@ class PartitionDriver:
             self._publish_live_done()
             return self._result
         with obs.span("finalize", cat="runtime", mode=self.mode):
+            if self.mode == "hybrid":
+                from repro.core.hybrid import hybrid_finalize
+
+                self._result = hybrid_finalize(self.state, self._split,
+                                               self.cfg)
+                self._publish_live_done()
+                return self._result
             if self.mode == "single":
                 edge_part = self.state.edge_part
             elif self.multihost:
@@ -480,7 +514,7 @@ class PartitionDriver:
         if mode != self.mode:
             raise SnapshotMismatch(f"snapshot was taken in mode {mode!r}, "
                                    f"driver is {self.mode!r}")
-        cls = NEState if self.mode == "single" else SpmdState
+        cls = SpmdState if self.mode == "spmd" else NEState
         want = cls._fields
         missing = set(want) - set(fields)
         if missing:
@@ -604,6 +638,12 @@ class PartitionDriver:
         res = self.finalize()
         if self.multihost:
             return self._save_artifact_multihost(dirpath, res)
+        if self._edges is None:
+            # hybrid mode never holds the source edge list for the round
+            # loop; the artifact save is the one consumer that needs it
+            self._edges = (self.source.read_all()
+                           if isinstance(self.source, EdgeFile)
+                           else np.asarray(as_graph(self.source).edges))
         return save_artifact(dirpath, res, self._edges, self.n,
                              config_fingerprint=config_fingerprint(self.cfg),
                              graph_fingerprint=self._graph_fp)

@@ -217,7 +217,7 @@ def worker_main(ns) -> int:
     from repro.runtime.driver import PartitionDriver
 
     pid = jax.process_index()
-    cfg = NEConfig(
+    hyper = dict(
         num_partitions=ns.partitions,
         alpha=ns.alpha,
         lam=ns.lam,
@@ -226,6 +226,15 @@ def worker_main(ns) -> int:
         max_rounds=ns.max_rounds,
         seed=ns.seed,
     )
+    partitioner = getattr(ns, "partitioner", "ne")
+    if partitioner == "hybrid":
+        from repro.core.hybrid import HybridConfig
+
+        cfg = HybridConfig(budget_frac=ns.budget_frac, **hyper)
+        driver_mode = "hybrid"
+    else:
+        cfg = NEConfig(**hyper)
+        driver_mode = "spmd"
     # one tracer per worker, always on: it is the single source of every
     # published timing (perf_counter span durations — monotonic,
     # NTP-immune; the meta line's start_unix is the only epoch stamp).
@@ -284,6 +293,7 @@ def worker_main(ns) -> int:
     extra: dict = {}
     with EdgeFile(ns.edgefile) as ef:
         kwargs = dict(
+            mode=driver_mode,
             snapshot_every=ns.snapshot_every,
             keep=ns.keep,
             exchange_dir=ns.exchange_dir,

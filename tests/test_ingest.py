@@ -1,0 +1,75 @@
+"""Text edge-list ingest tests (``repro.io.ingest``): SNAP-style files →
+canonical EdgeFile, with the same dedup/loop/order semantics as
+``canonicalize_stream`` and loud failure on malformed input."""
+import gzip
+
+import numpy as np
+import pytest
+
+from repro.graphs.rmat import rmat
+from repro.io.ingest import dump_text, ingest_text, iter_text_edges
+from repro.io.stream import canonicalize_stream
+
+
+@pytest.mark.parametrize("suffix", [".txt", ".txt.gz"])
+def test_roundtrip_matches_canonicalize(tmp_path, suffix):
+    g = rmat(10, 8, seed=7)
+    src = tmp_path / f"g{suffix}"
+    dump_text(np.asarray(g.edges), src, header="roundtrip — edge list")
+    ef = ingest_text(src, tmp_path / "a.edges", tmpdir=str(tmp_path))
+    ref = canonicalize_stream(np.asarray(g.edges), tmp_path / "b.edges",
+                              num_vertices=g.num_vertices,
+                              tmpdir=str(tmp_path))
+    assert ef.num_vertices == ref.num_vertices
+    assert ef.num_edges == ref.num_edges
+    np.testing.assert_array_equal(ef.read_all(), ref.read_all())
+
+
+def test_dedup_loops_comments_extra_columns(tmp_path):
+    src = tmp_path / "messy.txt"
+    src.write_text(
+        "# SNAP header\n"
+        "% KONECT header\n"
+        "\n"
+        "1 2\n"
+        "2\t1\n"          # directed duplicate — dedups with the above
+        "3 3\n"           # self loop — dropped
+        "0 2 17 1970\n"   # extra columns (weight, timestamp) ignored\n
+        "1 2\n")          # exact duplicate
+    ef = ingest_text(src, tmp_path / "messy.edges", tmpdir=str(tmp_path))
+    # non-loop max endpoint is 2 → n = 3 (the loop at 3 doesn't count)
+    assert ef.num_vertices == 3
+    np.testing.assert_array_equal(ef.read_all(), [[0, 2], [1, 2]])
+
+
+def test_iter_chunks_and_gz(tmp_path):
+    src = tmp_path / "e.txt.gz"
+    lines = "".join(f"{i} {i + 1}\n" for i in range(10))
+    with gzip.open(src, "wt") as f:
+        f.write(lines)
+    chunks = list(iter_text_edges(src, chunk_size=4))
+    assert [len(c) for c in chunks] == [4, 4, 2]
+    np.testing.assert_array_equal(
+        np.concatenate(chunks),
+        np.stack([np.arange(10), np.arange(1, 11)], axis=1))
+
+
+@pytest.mark.parametrize("bad, msg", [
+    ("1 2\n7\n", "expected 'src dst'"),
+    ("1 2\na b\n", "non-integer"),
+])
+def test_malformed_raises_with_lineno(tmp_path, bad, msg):
+    src = tmp_path / "bad.txt"
+    src.write_text(bad)
+    with pytest.raises(ValueError, match=msg) as exc:
+        list(iter_text_edges(src))
+    assert ":2:" in str(exc.value)   # names the offending line
+
+
+def test_explicit_num_vertices_skips_inference(tmp_path):
+    src = tmp_path / "e.txt"
+    src.write_text("0 1\n1 2\n")
+    ef = ingest_text(src, tmp_path / "e.edges", num_vertices=100,
+                     tmpdir=str(tmp_path))
+    assert ef.num_vertices == 100
+    assert ef.num_edges == 2
